@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing + CSV row emission.
+
+Every benchmark prints rows:  name,us_per_call,derived
+(one logical row per paper-table entry; `derived` packs the table's
+figure-of-merit as `key=value` pairs joined by `;`).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    packed = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{packed}")
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6

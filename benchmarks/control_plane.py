@@ -1,0 +1,84 @@
+"""Control-plane benchmarks: the scheduler math at service scale.
+
+Covers the two Pallas-kernel targets (EIrate scoring, GP posterior readout)
+and the incremental-GP engines (dense vs block-diagonal) at |L| = 2500
+(the Fig-5 synthetic scale) and |L| = 10k (service scale)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp import BlockIncrementalGP, IncrementalGP
+from repro.kernels import ops, ref
+
+from .common import FAST, emit
+
+
+def bench_eirate(n: int, N: int) -> None:
+    rng = np.random.default_rng(0)
+    mu = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    best = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    mem = jnp.asarray(rng.random((N, n)) < 0.1)
+    cost = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    sel = jnp.asarray(rng.random(n) < 0.3)
+
+    from .common import time_us
+    us_ref = time_us(lambda: jax.block_until_ready(
+        ref.eirate_ref(mu, sg, best, mem, cost, sel)))
+    emit(f"eirate_xla_n{n}_N{N}", us_ref, bytes=f"{(N*n*4)/1e6:.1f}MB")
+    # interpret-mode kernel timing is not meaningful for speed (it is a
+    # Python emulation); we record it for completeness only.
+    us_k = time_us(lambda: jax.block_until_ready(
+        ops.eirate(mu, sg, best, mem, cost, sel, interpret=True)), iters=2, warmup=1)
+    emit(f"eirate_pallas_interpret_n{n}_N{N}", us_k, note="correctness_path_only")
+
+
+def bench_gp_readout(k: int, n: int) -> None:
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((k, n)) * 0.1, jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(k), jnp.float32)
+    mu0 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    kd = (W * W).sum(0) + 1.0
+
+    from .common import time_us
+    us_ref = time_us(lambda: jax.block_until_ready(
+        ref.gp_readout_ref(W, alpha, mu0, kd)))
+    emit(f"gp_readout_xla_k{k}_n{n}", us_ref, flops=f"{2*k*n/1e6:.1f}M")
+
+
+def bench_incremental_engines() -> None:
+    from repro.core import synthetic_matern_problem
+    import time
+    prob = synthetic_matern_problem(num_users=20 if FAST else 50,
+                                    num_models_per_user=50, seed=0)
+    n = prob.num_models
+    order = np.random.default_rng(0).permutation(n)[: n // 2]
+
+    for name, gp in (
+        ("gp_engine_dense", IncrementalGP(prob.K.astype(np.float32),
+                                          prob.mu0.astype(np.float32))),
+        ("gp_engine_block", BlockIncrementalGP(
+            prob.K.astype(np.float32), prob.mu0.astype(np.float32),
+            BlockIncrementalGP.blocks_from_membership(prob.K, prob.membership))),
+    ):
+        t0 = time.perf_counter()
+        for i in order:
+            gp.observe(int(i), float(prob.z_true[i]))
+            gp.posterior()
+        us = (time.perf_counter() - t0) / len(order) * 1e6
+        emit(f"{name}_n{n}", us, events=len(order))
+
+
+def main() -> None:
+    bench_eirate(2500, 50)
+    if not FAST:
+        bench_eirate(10_000, 200)
+    bench_gp_readout(1250, 2500)
+    bench_incremental_engines()
+
+
+if __name__ == "__main__":
+    main()

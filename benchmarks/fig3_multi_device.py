@@ -1,0 +1,42 @@
+"""Paper Fig. 3: impact of multiple devices on MM-GP-EI.
+
+Figure of merit: time for the instantaneous regret to reach the threshold as
+the device count grows (the paper shows the curves dropping faster with more
+devices, with larger gains on DeepLearning: 14 test users vs Azure's 9)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import azure_problem, deeplearning_problem, regret_curves, simulate
+
+from .common import FAST, emit
+
+DEVICES = (1, 2, 4, 8)
+THRESHOLDS = {"azure": 0.03, "deeplearning": 0.02}
+
+
+def main() -> None:
+    seeds = range(2 if FAST else 5)
+    for ds_name, maker in (("azure", azure_problem),
+                           ("deeplearning", deeplearning_problem)):
+        th = THRESHOLDS[ds_name]
+        base = None
+        for M in DEVICES:
+            ts, dec = [], []
+            for seed in seeds:
+                prob = maker(seed=seed)
+                res = simulate(prob, "mdmt", num_devices=M, seed=seed)
+                ts.append(regret_curves(res).time_to_instantaneous(th))
+                dec.append(res.decision_seconds / max(res.decisions, 1) * 1e6)
+            t = float(np.mean(ts))
+            if base is None:
+                base = t
+            emit(f"fig3_{ds_name}_M{M}", float(np.mean(dec)),
+                 **{f"t_reach_{th}": f"{t:.0f}",
+                    "speedup_vs_M1": f"{base / t:.2f}",
+                    "ideal": f"{M}"})
+
+
+if __name__ == "__main__":
+    main()

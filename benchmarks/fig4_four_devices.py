@@ -1,0 +1,13 @@
+"""Paper Fig. 4: policy comparison with four computation devices."""
+
+from __future__ import annotations
+
+from . import fig2_single_device
+
+
+def main() -> None:
+    fig2_single_device.run(num_devices=4, tag="fig4")
+
+
+if __name__ == "__main__":
+    main()

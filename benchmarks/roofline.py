@@ -1,0 +1,45 @@
+"""Roofline report: one row per (arch x shape) dry-run cell.
+
+Reads the probe JSONs written by ``repro.launch.dryrun --probe`` (layer-exact
+extrapolated cost/collective analysis) plus the scan-based compile records
+(memory analysis / fits-HBM).  ``us_per_call`` is the roofline-predicted step
+time (max of the three terms) in microseconds on the 16x16 v5e pod."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str, name: str) -> dict | None:
+    p = DRYRUN / mesh / name
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def main() -> None:
+    mesh = "pod16x16"
+    probe_files = sorted((DRYRUN / mesh).glob("*__probe.json")) if (DRYRUN / mesh).exists() else []
+    if not probe_files:
+        emit("roofline_missing", 0.0, note="run repro.launch.dryrun --probe first")
+        return
+    for pf in probe_files:
+        rec = json.loads(pf.read_text())
+        arch, shape, rules = pf.stem.split("__")[:3]
+        scan = load(mesh, f"{arch}__{shape}__{rules}.json") or {}
+        step_s = max(rec["compute_seconds"], rec["memory_seconds"],
+                     rec["collective_seconds"])
+        emit(f"roofline_{arch}_{shape}_{rules}", step_s * 1e6,
+             dominant=rec["dominant"],
+             compute_ms=f"{rec['compute_seconds']*1e3:.2f}",
+             memory_ms=f"{rec['memory_seconds']*1e3:.2f}",
+             collective_ms=f"{rec['collective_seconds']*1e3:.2f}",
+             useful_flops=f"{rec['useful_flops_ratio']:.3f}",
+             fits_hbm=scan.get("fits_hbm", "n/a"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FAST=1 for a quick
+pass (fewer seeds/device counts).
+
+  PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Sections: fig2 fig3 fig4 fig5 control roofline (default: all).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "roofline")
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    failures = []
+    for section in want:
+        try:
+            if section == "fig2":
+                from . import fig2_single_device as m
+            elif section == "fig3":
+                from . import fig3_multi_device as m
+            elif section == "fig4":
+                from . import fig4_four_devices as m
+            elif section == "fig5":
+                from . import fig5_synthetic_speedup as m
+            elif section == "control":
+                from . import control_plane as m
+            elif section == "roofline":
+                from . import roofline as m
+            else:
+                raise KeyError(section)
+            m.main()
+        except Exception:
+            failures.append(section)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

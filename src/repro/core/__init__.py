@@ -1,0 +1,38 @@
+"""The paper's contribution: multi-device, multi-tenant GP-EI scheduling.
+
+Control-plane stack:
+  gp.py         zero-noise GP posterior (masked one-shot + incremental)
+  ei.py         tau / EI / multi-tenant EI / EIrate (eqs. 3-6, Lemma 1)
+  miu.py        Maximum Incremental Uncertainty (Section 5.1)
+  tenancy.py    TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
+  scheduler.py  event-driven MM-GP-EI + round-robin/random baselines
+  regret.py     cumulative + instantaneous global-happiness regret
+  cost_model.py roofline-derived c(x) (bridges to the data plane)
+  service.py    real-executor multi-tenant service loop
+"""
+
+from .ei import (  # noqa: F401
+    choose_next,
+    ei_matrix,
+    ei_total,
+    eirate_scores,
+    expected_improvement,
+    tau,
+)
+from .gp import BlockIncrementalGP, IncrementalGP, make_gp, posterior_masked  # noqa: F401
+from .miu import (  # noqa: F401
+    miu_cumulative_exact,
+    miu_diag_paper_bound,
+    miu_diag_upper_bound,
+    miu_greedy,
+    miu_s_exact,
+)
+from .regret import RegretCurves, final_regret, regret_curves, speedup_to_threshold  # noqa: F401
+from .scheduler import POLICIES, FailureEvent, SimResult, TrialRecord, simulate  # noqa: F401
+from .tenancy import (  # noqa: F401
+    Problem,
+    azure_problem,
+    deeplearning_problem,
+    matern52,
+    synthetic_matern_problem,
+)

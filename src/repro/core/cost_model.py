@@ -1,0 +1,87 @@
+"""Roofline-derived trial cost c(x) — the paper's Remark 1 made concrete.
+
+The paper assumes run cost c(x) is "easy to estimate [from] the dataset size,
+the computational hardware parameters, historical data".  Here that estimate
+is literally the dry-run roofline: for a trial = (arch config, input shape,
+slice of `chips` chips, `steps` steps),
+
+  c(x) = steps * max(compute_term, memory_term, collective_term)
+
+with the three terms taken from the probe JSON when one exists for the
+(arch, shape) cell (experiments/dryrun/...), else from an analytic model on
+the same hardware constants.  A measured-update hook blends in observed
+durations (historical data), which the service uses after every completed
+trial.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+REFERENCE_CHIPS = 256        # probes are taken on the 16x16 mesh
+
+
+@dataclass
+class CostModel:
+    mfu_assumption: float = 0.4      # analytic-path efficiency guess
+    measured_blend: float = 0.5      # EMA weight for observed durations
+    _measured: dict = field(default_factory=dict)
+    _probe_cache: dict = field(default_factory=dict)
+
+    # -- probe-backed path ---------------------------------------------------
+
+    def _probe(self, arch: str, shape: str, mesh: str = "pod16x16",
+               rules: str = "default"):
+        key = (arch, shape, mesh, rules)
+        if key not in self._probe_cache:
+            path = DRYRUN_DIR / mesh / f"{arch}__{shape}__{rules}__probe.json"
+            self._probe_cache[key] = json.loads(path.read_text()) if path.exists() else None
+        return self._probe_cache[key]
+
+    def step_seconds(self, arch: str, shape: str, chips: int = REFERENCE_CHIPS,
+                     cfg=None) -> float:
+        """Roofline step time for one (arch, shape) on a `chips`-chip slice."""
+        probe = self._probe(arch, shape)
+        if probe is not None:
+            scale = REFERENCE_CHIPS / max(chips, 1)   # fewer chips => more per-chip work
+            return max(probe["compute_seconds"], probe["memory_seconds"],
+                       probe["collective_seconds"]) * scale
+        if cfg is None:
+            from repro.configs import get_config
+            cfg = get_config(arch)
+        return self._analytic(cfg, shape, chips)
+
+    def _analytic(self, cfg, shape: str, chips: int) -> float:
+        from repro.configs import SHAPES
+        S, B, kind = SHAPES[shape]
+        n_active = cfg.active_param_count()
+        factor = 6.0 if kind == "train" else 2.0
+        tokens = S * B if kind in ("train", "prefill") else B
+        compute = factor * n_active * tokens / (chips * PEAK_FLOPS * self.mfu_assumption)
+        # memory term: params + optimizer traffic per step
+        param_bytes = cfg.param_count() * 4.0 * (3.0 if kind == "train" else 0.5)
+        memory = param_bytes / (chips * HBM_BW)
+        return max(compute, memory)
+
+    # -- trial-level costs ---------------------------------------------------
+
+    def trial_seconds(self, arch: str, shape: str, steps: int,
+                      chips: int = REFERENCE_CHIPS, overhead: float = 30.0,
+                      cfg=None) -> float:
+        """c(x) for a `steps`-step trial (+ fixed setup/compile overhead)."""
+        key = (arch, shape, chips)
+        est = overhead + steps * self.step_seconds(arch, shape, chips, cfg)
+        if key in self._measured:
+            est = (1 - self.measured_blend) * est + self.measured_blend * self._measured[key]
+        return est
+
+    def observe(self, arch: str, shape: str, chips: int, measured_seconds: float):
+        """Historical-data update (Remark 1): EMA of observed trial durations."""
+        key = (arch, shape, chips)
+        prev = self._measured.get(key, measured_seconds)
+        self._measured[key] = 0.5 * prev + 0.5 * measured_seconds

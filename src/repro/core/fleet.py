@@ -1,0 +1,57 @@
+"""Device fleet: the paper's M atomic devices = disjoint mesh slices.
+
+A production pod (16x16) is partitioned into M equal slices (e.g. 16 slices
+of 4x4 = 16 chips); each slice is the atomic unit a tenant trial occupies,
+exactly the paper's device abstraction.  The fleet tracks health: a failed
+slice kills its in-flight trial (the scheduler re-queues the model — it was
+never observed, so it simply returns to L \\ L(t)) and rejoins after repair.
+
+Heterogeneity: per-slice ``speed`` scales effective c(x); the MDMT policy is
+device-aware through EIrate = EI(x) / (c(x)/speed_d) (a strict generalization
+of eq. 5, see scheduler.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class DeviceSlice:
+    slice_id: int
+    chips: int
+    speed: float = 1.0
+    healthy: bool = True
+    busy_until: float = 0.0
+    current_trial: int | None = None
+
+
+@dataclass
+class Fleet:
+    slices: list[DeviceSlice]
+
+    @classmethod
+    def partition_pod(cls, total_chips: int = 256, num_slices: int = 8,
+                      speeds: list[float] | None = None) -> "Fleet":
+        assert total_chips % num_slices == 0
+        chips = total_chips // num_slices
+        speeds = speeds or [1.0] * num_slices
+        return cls([DeviceSlice(i, chips, speeds[i]) for i in range(num_slices)])
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.slices)
+
+    def free_at(self, t: float) -> list[DeviceSlice]:
+        return [s for s in self.slices
+                if s.healthy and s.current_trial is None and s.busy_until <= t]
+
+    def fail(self, slice_id: int) -> int | None:
+        """Mark slice failed; returns the killed trial id (to re-queue)."""
+        s = self.slices[slice_id]
+        s.healthy = False
+        killed, s.current_trial = s.current_trial, None
+        return killed
+
+    def recover(self, slice_id: int):
+        self.slices[slice_id].healthy = True

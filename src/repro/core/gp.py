@@ -1,0 +1,253 @@
+"""Gaussian-process posterior over a finite model set.
+
+The paper (Supplemental A) conditions a GP prior ``GP(mu(x), k(x, x'))`` on
+noise-free observations of a growing set of models.  Two engines are provided:
+
+* :func:`posterior_masked` — one-shot, fixed-shape, fully jittable posterior
+  over *all* models given an observation mask.  O(n^3); used for tests, small
+  problems and as the oracle for the incremental engine.
+
+* :class:`IncrementalGP` — event-driven engine used by the scheduler.  It
+  maintains a Cholesky factor of the observed-set kernel and the matrix
+  ``W = L^{-1} K[obs, :]`` so that appending one observation costs O(k * n)
+  and the full posterior mean/variance over all n models is always available
+  in O(1) extra work.  All buffers are preallocated at size n so every
+  append is a fixed-shape jitted step (no recompilation as observations grow).
+
+Observation noise is zero in the paper's setting (each model is run once);
+``jitter`` keeps the Cholesky numerically PSD and is chosen far below any
+kernel scale of interest (see DESIGN.md §3.3).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+DEFAULT_JITTER = 1e-6
+
+
+def posterior_masked(
+    K: jax.Array,
+    mu0: jax.Array,
+    z: jax.Array,
+    mask: jax.Array,
+    jitter: float = DEFAULT_JITTER,
+) -> tuple[jax.Array, jax.Array]:
+    """Posterior mean/variance over all n models given masked observations.
+
+    Uses the identity-padding trick: rows/cols of unobserved models are
+    replaced by identity rows, so the Cholesky of the padded matrix contains
+    the Cholesky of ``K[obs, obs]`` embedded in the observed rows and the
+    identity rows are inert (their RHS entries are zeroed).
+
+    Args:
+      K:    (n, n) prior covariance.
+      mu0:  (n,) prior mean.
+      z:    (n,) observed values; entries where ``mask`` is False are ignored.
+      mask: (n,) bool, True where observed.
+      jitter: diagonal jitter added to observed rows.
+
+    Returns:
+      (mu_post, var_post), each (n,).  For observed models the posterior mean
+      equals z and the variance is ~0.
+    """
+    n = K.shape[0]
+    m = mask.astype(K.dtype)
+    eye = jnp.eye(n, dtype=K.dtype)
+    A = K * (m[:, None] * m[None, :]) + eye * (1.0 - m) + eye * (jitter * m)
+    L = jnp.linalg.cholesky(A)
+    rhs = m * (z - mu0)
+    alpha = jax.scipy.linalg.cho_solve((L, True), rhs)
+    V = m[:, None] * K  # (n, n): column x holds K[obs, x] with unobserved rows zeroed
+    W = jax.scipy.linalg.solve_triangular(L, V, lower=True)
+    mu_post = mu0 + V.T @ alpha
+    var_post = jnp.diag(K) - jnp.sum(W * W, axis=0)
+    return mu_post, jnp.maximum(var_post, 0.0)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _append_step(
+    W: jax.Array,
+    alpha: jax.Array,
+    diag_acc: jax.Array,
+    K_row: jax.Array,
+    idx: jax.Array,
+    z_val: jax.Array,
+    mu0_val: jax.Array,
+    k: jax.Array,
+    jitter: jax.Array,
+):
+    """One fixed-shape incremental Cholesky/posterior update.
+
+    W:        (n, n) buffer; rows [0, k) hold L^{-1} K[obs, :].
+    alpha:    (n,) buffer; entries [0, k) hold L^{-1} (z_obs - mu0_obs).
+    diag_acc: (n,) running sum of W^2 over observed rows (= prior_var - post_var).
+    K_row:    (n,) row of the prior kernel for the new model.
+    idx:      scalar int, index of the new model.
+    """
+    # l = L^{-1} K[obs, new] is exactly column `idx` of W (rows >= k are zero).
+    l = W[:, idx]
+    d2 = K_row[idx] + jitter - jnp.dot(l, l)
+    d = jnp.sqrt(jnp.maximum(d2, jitter))
+    w_new = (K_row - l @ W) / d
+    a_new = (z_val - mu0_val - jnp.dot(l, alpha)) / d
+    W = jax.lax.dynamic_update_index_in_dim(W, w_new, k, axis=0)
+    alpha = alpha.at[k].set(a_new)
+    diag_acc = diag_acc + w_new * w_new
+    return W, alpha, diag_acc
+
+
+@jax.jit
+def _readout(W, alpha, mu0, kdiag, diag_acc):
+    # alpha @ W (not W.T @ alpha): keeps the (n, n) buffer row-major and
+    # avoids an eager 25MB transpose copy per scheduler decision.
+    mu = mu0 + alpha @ W
+    var = jnp.maximum(kdiag - diag_acc, 0.0)
+    return mu, var
+
+
+class IncrementalGP:
+    """Incremental zero-noise GP posterior over a fixed finite model set."""
+
+    def __init__(self, K, mu0, jitter: float = DEFAULT_JITTER):
+        self.K = jnp.asarray(K)
+        self.mu0 = jnp.asarray(mu0, dtype=self.K.dtype)
+        n = self.K.shape[0]
+        if self.K.shape != (n, n):
+            raise ValueError(f"K must be square, got {self.K.shape}")
+        if self.mu0.shape != (n,):
+            raise ValueError(f"mu0 must be ({n},), got {self.mu0.shape}")
+        self.n = n
+        self.jitter = jnp.asarray(jitter, dtype=self.K.dtype)
+        dtype = self.K.dtype
+        self._W = jnp.zeros((n, n), dtype=dtype)
+        self._alpha = jnp.zeros((n,), dtype=dtype)
+        self._diag_acc = jnp.zeros((n,), dtype=dtype)
+        self._k = 0
+        self._kdiag = None
+        self.observed: list[int] = []
+        self._z = {}
+
+    def observe(self, idx: int, z_val: float) -> None:
+        """Condition on z(model idx) = z_val.  O(n^2) fixed-shape jitted step."""
+        if idx in self._z:
+            raise ValueError(f"model {idx} already observed")
+        self._W, self._alpha, self._diag_acc = _append_step(
+            self._W,
+            self._alpha,
+            self._diag_acc,
+            self.K[idx],
+            jnp.asarray(idx),
+            jnp.asarray(z_val, dtype=self.K.dtype),
+            self.mu0[idx],
+            jnp.asarray(self._k),
+            self.jitter,
+        )
+        self._k += 1
+        self.observed.append(idx)
+        self._z[idx] = float(z_val)
+
+    @property
+    def num_observed(self) -> int:
+        return self._k
+
+    def posterior(self) -> tuple[jax.Array, jax.Array]:
+        """(mu, var) over all n models, O(n^2) readout (jitted, row-major)."""
+        if self._kdiag is None:
+            self._kdiag = jnp.diag(self.K)
+        return _readout(self._W, self._alpha, self.mu0, self._kdiag,
+                        self._diag_acc)
+
+    def posterior_sd(self) -> tuple[jax.Array, jax.Array]:
+        mu, var = self.posterior()
+        return mu, jnp.sqrt(var)
+
+
+class BlockIncrementalGP:
+    """Incremental GP specialized to block-diagonal priors.
+
+    In the paper's experimental setting each "model" is an (algorithm,
+    dataset) pair, so tenants' candidate sets are disjoint and K is block
+    diagonal — observations for one tenant never move another tenant's
+    posterior.  Exploiting that turns the per-event cost from O(n^2) to
+    O(m^2) (m = block size, n = N*m total), a ~N x control-plane speedup
+    measured in benchmarks/control_plane.py.  Same interface as
+    :class:`IncrementalGP`; equivalence is tested in tests/test_gp.py.
+    """
+
+    def __init__(self, K, mu0, blocks: list, jitter: float = DEFAULT_JITTER):
+        import numpy as np
+        K = np.asarray(K)
+        mu0 = np.asarray(mu0, dtype=K.dtype)
+        self.n = K.shape[0]
+        self._blocks = [np.asarray(b, dtype=np.int64) for b in blocks]
+        seen = np.concatenate(self._blocks)
+        assert len(seen) == self.n and len(set(seen.tolist())) == self.n, \
+            "blocks must partition the model set"
+        self._engines = [
+            IncrementalGP(K[np.ix_(b, b)], mu0[b], jitter) for b in self._blocks]
+        self._local = {}
+        for bi, b in enumerate(self._blocks):
+            for li, g in enumerate(b.tolist()):
+                self._local[g] = (bi, li)
+        self._mu = mu0.astype(np.float32).copy()
+        self._var = np.clip(np.diag(K), 0, None).astype(np.float32)
+        self._dirty: set[int] = set()
+        self.observed: list[int] = []
+        self._z = {}
+
+    @staticmethod
+    def blocks_from_membership(K, membership, atol: float = 0.0) -> list | None:
+        """Tenant partition if candidate sets are disjoint and K has no
+        cross-block mass; None if the structure doesn't hold."""
+        import numpy as np
+        membership = np.asarray(membership, bool)
+        if (membership.sum(axis=0) != 1).any():
+            return None
+        blocks = [np.nonzero(membership[i])[0] for i in range(membership.shape[0])]
+        K = np.asarray(K)
+        mask = np.zeros_like(K, dtype=bool)
+        for b in blocks:
+            mask[np.ix_(b, b)] = True
+        if np.abs(K[~mask]).max(initial=0.0) > atol:
+            return None
+        return blocks
+
+    def observe(self, idx: int, z_val: float) -> None:
+        bi, li = self._local[idx]
+        self._engines[bi].observe(li, z_val)
+        self._dirty.add(bi)
+        self.observed.append(idx)
+        self._z[idx] = float(z_val)
+
+    @property
+    def num_observed(self) -> int:
+        return len(self.observed)
+
+    def posterior(self):
+        import numpy as np
+        for bi in self._dirty:
+            mu_b, var_b = self._engines[bi].posterior()
+            b = self._blocks[bi]
+            self._mu[b] = np.asarray(mu_b)
+            self._var[b] = np.asarray(var_b)
+        self._dirty.clear()
+        return jnp.asarray(self._mu), jnp.asarray(self._var)
+
+    def posterior_sd(self):
+        mu, var = self.posterior()
+        return mu, jnp.sqrt(var)
+
+
+def make_gp(K, mu0, membership=None, jitter: float = DEFAULT_JITTER):
+    """Pick the block engine when the tenant structure allows it."""
+    if membership is not None:
+        blocks = BlockIncrementalGP.blocks_from_membership(K, membership)
+        if blocks is not None and len(blocks) > 1:
+            return BlockIncrementalGP(K, mu0, blocks, jitter)
+    return IncrementalGP(K, mu0, jitter)

@@ -1,0 +1,268 @@
+"""Real-executor multi-tenant AutoML service — the paper's system, end to end.
+
+Unlike the simulator (scheduler.py), here z(x) is genuinely unknown until a
+trial *actually trains*: each model x = (tenant, architecture) is a reduced
+config from the assigned pool trained on that tenant's synthetic dataset, and
+z is an accuracy-like score exp(-val_loss).  The control plane is identical —
+GP posterior + multi-tenant EIrate (Algorithm 1) — and c(x) comes from the
+roofline cost model (Remark 1), updated with measured durations.
+
+Fault tolerance: the service checkpoints its control state (observations,
+in-flight set) as JSON after every event; on restart, in-flight trials are
+re-queued (their models were never observed — the TSHB abstraction makes
+recovery trivial).  Fleet slice failures likewise just return the model to
+the unselected pool.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from .cost_model import CostModel
+from .ei import choose_next, single_tenant_ei_scores
+from .fleet import Fleet
+from .gp import IncrementalGP
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    tenant_id: int
+    data_seed: int
+    zipf_a: float            # dataset "difficulty" knob
+
+
+@dataclass
+class ServiceConfig:
+    steps_per_trial: int = 30
+    eval_steps: int = 4
+    seq_len: int = 128
+    batch: int = 8
+    lr: float = 1e-3
+    policy: str = "mdmt"     # mdmt | round_robin | random
+
+
+class RealExecutor:
+    """Trains a reduced-config model on the tenant's synthetic dataset."""
+
+    def __init__(self, svc: ServiceConfig):
+        self.svc = svc
+
+    def run(self, tenant: TenantSpec, arch: str) -> tuple[float, float]:
+        from repro.data.pipeline import DataConfig, SyntheticLMStream
+        from repro.models import init_params
+        from repro.models.model import forward_loss
+        from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+        t0 = time.perf_counter()
+        cfg = get_smoke_config(arch)
+        svc = self.svc
+        dcfg = DataConfig(seq_len=svc.seq_len, global_batch=svc.batch,
+                          seed=tenant.data_seed, zipf_a=tenant.zipf_a)
+        stream = SyntheticLMStream(dcfg, cfg)
+        params = init_params(cfg, jax.random.PRNGKey(tenant.data_seed))
+        opt_cfg = OptConfig(lr=svc.lr, warmup_steps=5,
+                            total_steps=svc.steps_per_trial, weight_decay=0.0)
+        opt = adamw_init(params, opt_cfg)
+
+        @jax.jit
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: forward_loss(p, batch, cfg, None))(params)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            return params, opt, loss
+
+        @jax.jit
+        def eval_loss(params, batch):
+            return forward_loss(params, batch, cfg, None)
+
+        for s in range(svc.steps_per_trial):
+            batch = jax.tree.map(jnp.asarray, stream.batch_at(s))
+            params, opt, _ = step(params, opt, batch)
+        losses = [float(eval_loss(params, jax.tree.map(
+            jnp.asarray, stream.batch_at(10_000 + s))))
+            for s in range(svc.eval_steps)]
+        val = float(np.mean(losses))
+        z = float(np.exp(-val))                  # accuracy-like, in (0, 1]
+        return z, time.perf_counter() - t0
+
+
+@dataclass
+class ServiceTrial:
+    model: int
+    tenant: int
+    arch: str
+    slice_id: int
+    t_start: float
+    t_end: float | None = None
+    z: float | None = None
+
+
+class AutoMLService:
+    """Event-driven service over a Fleet, MM-GP-EI scheduled."""
+
+    def __init__(
+        self,
+        tenants: list[TenantSpec],
+        archs: list[str],
+        fleet: Fleet,
+        executor,
+        svc_cfg: ServiceConfig | None = None,
+        prior: tuple[np.ndarray, np.ndarray] | None = None,
+        cost_model: CostModel | None = None,
+        checkpoint_path: str | None = None,
+        seed: int = 0,
+    ):
+        self.tenants, self.archs, self.fleet = tenants, archs, fleet
+        self.executor = executor
+        self.svc = svc_cfg or ServiceConfig()
+        self.cost_model = cost_model or CostModel()
+        self.checkpoint_path = Path(checkpoint_path) if checkpoint_path else None
+        self.rng = np.random.default_rng(seed)
+
+        N, A = len(tenants), len(archs)
+        self.n = N * A
+        mu_a, K_a = prior if prior is not None else (
+            np.full(A, 0.5), 0.05 * np.eye(A) + 0.01)
+        self.mu0 = np.tile(mu_a, N)
+        K = np.zeros((self.n, self.n))
+        for i in range(N):
+            K[i * A:(i + 1) * A, i * A:(i + 1) * A] = K_a
+        self.K = K + 1e-8 * np.eye(self.n)
+        self.membership = np.zeros((N, self.n), dtype=bool)
+        for i in range(N):
+            self.membership[i, i * A:(i + 1) * A] = True
+
+        self.cost = np.array([
+            self.cost_model.trial_seconds(
+                archs[x % A] + "", "train_4k",
+                steps=self.svc.steps_per_trial,
+                chips=fleet.slices[0].chips,
+                cfg=get_smoke_config(archs[x % A]))
+            for x in range(self.n)])
+
+        self.gp = IncrementalGP(self.K, self.mu0)
+        self.selected = np.zeros(self.n, bool)
+        self.best = np.full(N, -np.inf)
+        self.trials: list[ServiceTrial] = []
+        self.rr_pointer = 0
+        self.t = 0.0
+
+    # -- policies (same math as scheduler.py, unknown z) ----------------------
+
+    def _choose(self) -> int | None:
+        if self.selected.all():
+            return None
+        mu, sd = self.gp.posterior_sd()
+        best = np.where(np.isfinite(self.best), self.best, float(self.mu0.min()) - 1.0)
+        if self.svc.policy == "mdmt":
+            idx, score = choose_next(
+                mu, sd, jnp.asarray(best), jnp.asarray(self.membership),
+                jnp.asarray(self.cost), jnp.asarray(self.selected))
+            return int(idx) if np.isfinite(float(score)) else None
+        users = np.nonzero((self.membership & ~self.selected[None, :]).any(1))[0]
+        if users.size == 0:
+            return None
+        if self.svc.policy == "random":
+            u = int(self.rng.choice(users))
+        else:  # round_robin
+            u = int(users[np.searchsorted(users, self.rr_pointer % len(self.tenants)) % users.size])
+            self.rr_pointer = u + 1
+        scores = single_tenant_ei_scores(
+            mu, sd, jnp.asarray(best[u]), jnp.asarray(self.membership[u]),
+            jnp.asarray(self.selected))
+        m = int(jnp.argmax(scores))
+        return m if np.isfinite(float(scores[m])) else None
+
+    # -- event loop ------------------------------------------------------------
+
+    def run(self, max_trials: int | None = None) -> list[ServiceTrial]:
+        A = len(self.archs)
+        budget = max_trials if max_trials is not None else self.n
+        launched = 0
+        inflight: list[ServiceTrial] = []
+        while launched < budget or inflight:
+            for s in self.fleet.free_at(self.t):
+                if launched >= budget:
+                    break
+                m = self._choose()
+                if m is None:
+                    break
+                tenant, arch = self.tenants[m // A], self.archs[m % A]
+                z, wall = self.executor.run(tenant, arch)
+                dur = wall / s.speed
+                tr = ServiceTrial(m, tenant.tenant_id, arch, s.slice_id,
+                                  self.t, self.t + dur, z)
+                self.selected[m] = True
+                s.current_trial = len(self.trials)
+                s.busy_until = self.t + dur
+                self.trials.append(tr)
+                inflight.append(tr)
+                launched += 1
+                self.cost_model.observe(arch, "train_4k", s.chips, wall)
+            if not inflight:
+                break
+            # advance to next completion
+            inflight.sort(key=lambda tr: tr.t_end)
+            tr = inflight.pop(0)
+            self.t = tr.t_end
+            self.gp.observe(tr.model, tr.z)
+            u = tr.model // A
+            self.best[u] = max(self.best[u], tr.z) if np.isfinite(self.best[u]) else tr.z
+            self.fleet.slices[tr.slice_id].current_trial = None
+            self._checkpoint()
+        return self.trials
+
+    # -- fault tolerance --------------------------------------------------------
+
+    def _checkpoint(self):
+        if self.checkpoint_path is None:
+            return
+        state = {
+            "t": self.t,
+            "observations": {str(i): self.gp._z[i] for i in self.gp.observed},
+            "selected": self.selected.tolist(),
+        }
+        tmp = self.checkpoint_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(state))
+        tmp.rename(self.checkpoint_path)
+
+    def restore(self):
+        """Re-apply observations; un-select in-flight (never-observed) models."""
+        if self.checkpoint_path is None or not self.checkpoint_path.exists():
+            return False
+        state = json.loads(self.checkpoint_path.read_text())
+        A = len(self.archs)
+        self.t = state["t"]
+        for k, z in state["observations"].items():
+            m = int(k)
+            self.gp.observe(m, z)
+            self.selected[m] = True
+            u = m // A
+            self.best[u] = max(self.best[u], z) if np.isfinite(self.best[u]) else z
+        # anything selected-but-not-observed was in flight during the crash
+        observed = set(self.gp.observed)
+        for m, was in enumerate(state["selected"]):
+            if was and m not in observed:
+                self.selected[m] = False   # re-queue
+        return True
+
+
+def estimate_prior(archs: list[str], prior_tenants: list[TenantSpec],
+                   executor) -> tuple[np.ndarray, np.ndarray]:
+    """The paper's protocol: isolate a few tenants, fit prior mean/cov."""
+    rows = []
+    for t in prior_tenants:
+        rows.append([executor.run(t, a)[0] for a in archs])
+    acc = np.asarray(rows)
+    mu = acc.mean(axis=0)
+    K = np.cov(acc, rowvar=False) if len(rows) > 1 else 0.05 * np.eye(len(archs))
+    K = K + 1e-4 * np.eye(len(archs))
+    return mu, K

@@ -1,0 +1,51 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+Each op dispatches kernel-vs-reference by platform: the Pallas TPU kernels
+are the target implementation; on CPU (this container) they run under
+``interpret=True`` for correctness validation, while production model code
+defaults to the XLA reference path (``use_pallas=False``) because Mosaic does
+not lower on the CPU backend.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .ei_score import eirate_pallas
+from .flash_attention import flash_attention_pallas
+from .gp_readout import gp_readout_pallas
+from .ssd import ssd_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def eirate(mu, sigma, best, membership, cost, selected, *, use_pallas=True,
+           **kw):
+    if not use_pallas:
+        return ref.eirate_ref(mu, sigma, best, membership, cost, selected)
+    kw.setdefault("interpret", _interpret_default())
+    return eirate_pallas(mu, sigma, best, membership, cost, selected, **kw)
+
+
+def gp_readout(W, alpha, mu0, k_diag, *, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.gp_readout_ref(W, alpha, mu0, k_diag)
+    kw.setdefault("interpret", _interpret_default())
+    return gp_readout_pallas(W, alpha, mu0, k_diag, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    kw.setdefault("interpret", _interpret_default())
+    return flash_attention_pallas(q, k, v, causal=causal, window=window, **kw)
+
+
+def ssd_mix(x, dt, log_a, b, c, *, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.ssd_ref(x, dt, log_a, b, c)
+    kw.setdefault("interpret", _interpret_default())
+    return ssd_pallas(x, dt, log_a, b, c, **kw)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately the *simplest correct* formulations (naive softmax
+attention, per-timestep SSD recurrence, closed-form EI) — the kernels are
+validated against them over shape/dtype sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+
+# --- EIrate ----------------------------------------------------------------
+
+def eirate_ref(mu, sigma, best, membership, cost, selected) -> jax.Array:
+    """(n,) EIrate scores; -1e30 at selected models (matches kernel epilogue)."""
+    mu = mu.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    best = best.astype(jnp.float32)
+    safe = jnp.where(sigma > 0, sigma, 1.0)
+    u = (mu[None, :] - best[:, None]) / safe[None, :]
+    tau = u * norm.cdf(u) + norm.pdf(u)
+    ei = safe[None, :] * tau
+    ei0 = jnp.maximum(mu[None, :] - best[:, None], 0.0)
+    ei = jnp.where(sigma[None, :] > 0, ei, ei0)
+    total = jnp.sum(jnp.where(membership.astype(bool), ei, 0.0), axis=0)
+    return jnp.where(selected.astype(bool), -1e30, total / cost.astype(jnp.float32))
+
+
+# --- GP posterior readout ---------------------------------------------------
+
+def gp_readout_ref(W, alpha, mu0, k_diag):
+    W = W.astype(jnp.float32)
+    mu = mu0.astype(jnp.float32) + W.T @ alpha.astype(jnp.float32)
+    var = jnp.maximum(k_diag.astype(jnp.float32) - jnp.sum(W * W, axis=0), 0.0)
+    return mu, var
+
+
+# --- attention ---------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """Naive full-matrix GQA attention. q (B,S,Hq,D), k/v (B,S,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, kf) / jnp.sqrt(jnp.float32(D))
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, vf)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# --- SSD ---------------------------------------------------------------------
+
+def ssd_ref(x, dt, log_a, b, c):
+    """Per-timestep SSD recurrence (the definitionally-correct oracle).
+
+    x (B,S,H,P), dt/log_a (B,S,H), b/c (B,S,N) -> y (B,S,H,P) fp32,
+    y_t = C_t . h_t with h_t = exp(log_a_t) h_{t-1} + dt_t B_t (x) x_t.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    def step(h, inp):
+        xt, lat, bt, ct = inp                     # (B,H,P), (B,H), (B,N), (B,N)
+        h = jnp.exp(lat)[..., None, None] * h + jnp.einsum(
+            "bn,bhp->bhpn", bt.astype(jnp.float32), xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xdt.swapaxes(0, 1), log_a.astype(jnp.float32).swapaxes(0, 1),
+         b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)                       # (B,S,H,P)

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, SPMD-partitions and compiles on the production meshes.
+
+  single pod : 16 x 16 = 256 chips, axes ("data", "model")
+  multi pod  : 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model")
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first backend init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+  python -m repro.launch.dryrun --arch ... --shape ... --rules fsdp
+
+Each cell writes experiments/dryrun/<mesh>/<arch>__<shape>__<rules>.json with
+memory analysis, cost analysis, the collective schedule and roofline terms
+(consumed by EXPERIMENTS.md and benchmarks/roofline.py).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.hlo_analysis import analyze_compiled, model_flops_for_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    FSDP_RULES,
+    PUREDP_RULES,
+    QROWS_RULES,
+)
+
+RULES = {"default": DEFAULT_RULES, "fsdp": FSDP_RULES,
+         "puredp": PUREDP_RULES, "qrows": QROWS_RULES}
+OUT_ROOT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _compile_cell(cfg, shape: str, mesh, rules_name: str):
+    cell = build_cell(cfg, shape, mesh, RULES[rules_name])
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return cell, compiled, t_lower, t_compile
+
+
+PROBE_KEYS = ("flops", "bytes", "transcendentals", "wire", "payload")
+
+
+def _measure_probe(cfg, shape, mesh, rules_name, verbose):
+    from repro.launch.hlo_analysis import parse_collectives
+    cell, compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh, rules_name)
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text(), mesh.devices.size)
+    rec = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "wire": colls.wire_bytes,
+        "payload": colls.payload_bytes,
+        "counts": colls.counts,
+        "by_op": colls.by_op_bytes,
+    }
+    if verbose:
+        print(f"  probe L={cfg.num_layers} S(shape)={shape}: "
+              f"flops={rec['flops']:.3e} wire={rec['wire']:.3e} "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return rec
+
+
+def probe_roofline(arch: str, shape: str, multi_pod: bool,
+                   rules_name: str = "default", verbose: bool = True,
+                   config_overrides: dict | None = None) -> dict:
+    """Layer-exact roofline via unrolled probes + linear extrapolation.
+
+    XLA's cost analysis counts while-loop bodies once, so the scanned full
+    model under-reports flops/bytes/collectives by ~L.  The probe compiles
+    the same cell with 1 and 2 (unrolled) layer units; every per-layer
+    quantity is the difference, and the full-depth value is
+    f(1) + (units-1) * (f(2) - f(1)).  Exact for homogeneous stacks (all of
+    ours: the hybrid's unit is its 6-layer group).
+
+    For long-sequence prefill cells, unrolling the inner (query-block /
+    SSD-chunk) scans at S=32k makes the probe HLO enormous; instead we probe
+    at two shorter sequence lengths and fit the per-layer and fixed costs as
+    b*S + c*S^2 (attention is quadratic in S, every other term linear),
+    then evaluate the fit at the target S.  Exact for the same reason the
+    layer fit is: the compiled cost IS a polynomial of that form.
+    """
+    from dataclasses import replace as dc_replace
+
+    base = get_config(arch)
+    if config_overrides:
+        base = dc_replace(base, **config_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    unit = base.hybrid_attn_every if base.family == "hybrid" else 1
+    total_units = base.num_layers // unit
+    S_target, B, kind = SHAPES[shape]
+
+    def cfg_for(n_units):
+        over = dict(num_layers=unit * n_units, unroll_layers=True)
+        if base.ssm is not None:
+            over["ssm"] = base.ssm._replace(unroll=True)
+        return dc_replace(base, **over)
+
+    seq_fit = kind == "prefill" and S_target > 8192
+    if seq_fit:
+        # 2 units x 2 sequence lengths; quadratic-in-S fit per unit level.
+        S1, S2 = 2048, 4096
+        import repro.configs as cfgmod
+        meas = {}
+        for n_units in (1, 2):
+            for S_probe in (S1, S2):
+                key = f"__probe_{shape}_{S_probe}"
+                cfgmod.SHAPES[key] = (S_probe, B, kind)
+                try:
+                    meas[(n_units, S_probe)] = _measure_probe(
+                        cfg_for(n_units), key, mesh, rules_name, verbose)
+                finally:
+                    del cfgmod.SHAPES[key]
+
+        def fit_eval(key):
+            # layer(S) and fixed(S), each modeled as b*S + c*S^2
+            def at(n, S):
+                return meas[(n, S)][key]
+            out = {}
+            for part, val1, val2 in (
+                ("layer", at(2, S1) - at(1, S1), at(2, S2) - at(1, S2)),
+                ("fixed", 2 * at(1, S1) - at(2, S1), 2 * at(1, S2) - at(2, S2)),
+            ):
+                c = (val2 / S2 - val1 / S1) / (S2 - S1)
+                b = val1 / S1 - c * S1
+                out[part] = b * S_target + c * S_target ** 2
+            return max(out["fixed"], 0.0) + total_units * max(out["layer"], 0.0)
+
+        probes_extrap = {k: fit_eval(k) for k in PROBE_KEYS}
+        # collective op counts don't depend on S; reuse the layer fit at S2
+        c1, c2 = meas[(1, S2)]["counts"], meas[(2, S2)]["counts"]
+        counts = {op: c1.get(op, 0) + (total_units - 1) * (c2.get(op, 0) - c1.get(op, 0))
+                  for op in set(c1) | set(c2)}
+        b1, b2 = meas[(1, S2)]["by_op"], meas[(2, S2)]["by_op"]
+        scale = probes_extrap["wire"] / max(
+            b1 and (sum(b1.values()) + (total_units - 1)
+                    * (sum(b2.values()) - sum(b1.values()))) or 1.0, 1e-9)
+        by_op = {op: (b1.get(op, 0.0) + (total_units - 1)
+                      * (b2.get(op, 0.0) - b1.get(op, 0.0))) * scale
+                 for op in set(b1) | set(b2)}
+    else:
+        probes = {n: _measure_probe(cfg_for(n), shape, mesh, rules_name, verbose)
+                  for n in (1, 2)}
+
+        def extrap(key):
+            return probes[1][key] + (total_units - 1) * (probes[2][key] - probes[1][key])
+
+        probes_extrap = {k: extrap(k) for k in PROBE_KEYS}
+        counts = {
+            op: probes[1]["counts"].get(op, 0)
+            + (total_units - 1) * (probes[2]["counts"].get(op, 0) - probes[1]["counts"].get(op, 0))
+            for op in set(probes[1]["counts"]) | set(probes[2]["counts"])}
+        by_op = {
+            op: probes[1]["by_op"].get(op, 0.0)
+            + (total_units - 1) * (probes[2]["by_op"].get(op, 0.0) - probes[1]["by_op"].get(op, 0.0))
+            for op in set(probes[1]["by_op"]) | set(probes[2]["by_op"])}
+
+    from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+    flops, byts, wire = (probes_extrap["flops"], probes_extrap["bytes"],
+                         probes_extrap["wire"])
+    num_devices = mesh.devices.size
+    mf = model_flops_for_cell(base, shape)
+    compute_s, memory_s, coll_s = flops / PEAK_FLOPS, byts / HBM_BW, wire / ICI_BW
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "rules": rules_name,
+        "num_devices": num_devices, "probe_units": [1, 2],
+        "seq_fit": seq_fit,
+        "total_units": total_units,
+        "flops_per_device": flops, "bytes_per_device": byts,
+        "transcendentals": probes_extrap["transcendentals"],
+        "collective_wire_bytes": wire,
+        "collective_payload_bytes": probes_extrap["payload"],
+        "collectives": counts, "collective_bytes_by_op": by_op,
+        "compute_seconds": compute_s, "memory_seconds": memory_s,
+        "collective_seconds": coll_s,
+        "dominant": max((("compute", compute_s), ("memory", memory_s),
+                         ("collective", coll_s)), key=lambda kv: kv[1])[0],
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / (flops * num_devices) if flops else 0.0,
+    }
+    out_dir = OUT_ROOT / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape}__{rules_name}__probe.json").write_text(
+        json.dumps(rec, indent=1))
+    if verbose:
+        print(f"[probe {mesh_name}] {arch} x {shape} ({rules_name}): "
+              f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={coll_s*1e3:.2f}ms dominant={rec['dominant']} "
+              f"useful={rec['useful_flops_ratio']:.3f}")
+    return rec
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, rules_name: str = "default",
+             verbose: bool = True, config_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if config_overrides:
+        from dataclasses import replace
+        cfg = replace(cfg, **config_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = build_cell(cfg, shape, mesh, RULES[rules_name])
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    if verbose:
+        print(compiled.memory_analysis())   # proves it fits
+        ca = compiled.cost_analysis() or {}
+        print({k: ca[k] for k in ("flops", "bytes accessed", "transcendentals")
+               if k in ca})
+
+    roof = analyze_compiled(
+        compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+        num_devices=mesh.devices.size,
+        model_flops_global=model_flops_for_cell(cfg, shape))
+    rec = roof.to_dict()
+    rec.update(kind=cell.kind, rules=rules_name,
+               lower_seconds=round(t_lower, 2), compile_seconds=round(t_compile, 2))
+
+    out_dir = OUT_ROOT / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape}__{rules_name}.json"
+    out_path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {shape} ({rules_name}): "
+              f"compute={roof.compute_seconds*1e3:.2f}ms "
+              f"memory={roof.memory_seconds*1e3:.2f}ms "
+              f"collective={roof.collective_seconds*1e3:.2f}ms "
+              f"dominant={roof.dominant} useful={roof.useful_flops_ratio:.3f} "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+    return rec
+
+
+def run_all(multi_pod: bool, rules_name: str, jobs: int) -> int:
+    """Fan each cell out to a subprocess (isolates compile memory)."""
+    import subprocess
+    todo = cells()
+    procs: list[tuple[str, str, subprocess.Popen]] = []
+    failed = []
+    done = 0
+
+    def launch(a, s):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--rules", rules_name, "--quiet"]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
+        return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+
+    queue = list(todo)
+    while queue or procs:
+        while queue and len(procs) < jobs:
+            a, s = queue.pop(0)
+            procs.append((a, s, launch(a, s)))
+        a, s, p = procs.pop(0)
+        out, _ = p.communicate()
+        done += 1
+        status = "ok" if p.returncode == 0 else "FAIL"
+        print(f"[{done}/{len(todo)}] {a} x {s}: {status}")
+        if p.returncode != 0:
+            failed.append((a, s))
+            print(out[-4000:])
+    if failed:
+        print("FAILED CELLS:", failed)
+        return 1
+    print(f"all {len(todo)} cells compiled on "
+          f"{'2x16x16' if multi_pod else '16x16'} mesh")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="default",
+                    choices=list(RULES) + ["preferred"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="layer-exact roofline via 1/2-unit unrolled probes")
+    ap.add_argument("--bf16-attn", action="store_true",
+                    help="perf lever: bf16 attention softmax (default fp32)")
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"])
+    ap.add_argument("--tag", default=None,
+                    help="suffix for the output json (perf-iteration runs)")
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(run_all(args.multi_pod, args.rules, args.jobs))
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    if args.rules == "preferred":
+        from repro.configs import preferred_rules_name
+        args.rules = preferred_rules_name(args.arch, args.shape)
+        print(f"preferred rules for {args.arch} x {args.shape}: {args.rules}")
+    overrides = {}
+    if args.bf16_attn:
+        overrides["attn_logits_fp32"] = False
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.probe:
+        rec = probe_roofline(args.arch, args.shape, args.multi_pod, args.rules,
+                             verbose=not args.quiet,
+                             config_overrides=overrides or None)
+    else:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.rules,
+                       verbose=not args.quiet,
+                       config_overrides=overrides or None)
+    if args.tag:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        suffix = "__probe" if args.probe else ""
+        path = (OUT_ROOT / mesh_name /
+                f"{args.arch}__{args.shape}__{args.rules}{suffix}__{args.tag}.json")
+        path.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

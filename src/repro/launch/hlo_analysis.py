@@ -1,0 +1,178 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources (per the brief):
+  * ``compiled.cost_analysis()``  -> HLO FLOPs + HLO bytes (per-device: the
+    compiled module is the SPMD per-device program).
+  * ``compiled.as_text()``        -> post-partitioning HLO; we parse every
+    all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+    and sum transferred bytes.
+
+Hardware model (TPU v5e target):
+  peak 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s per ICI link.
+
+Terms (seconds, per training/serving step):
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / ICI_BW
+
+``wire_bytes`` uses the standard ring model per op (e.g. all-reduce moves
+2(g-1)/g x payload per device); ``payload_bytes`` (the raw "sum of operand
+sizes" the brief describes) is recorded alongside for transparency.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+HBM_PER_CHIP = 16e9       # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[\w\[\]{},\d]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+_GROUPS_ARRAY_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)        # op -> #occurrences
+    payload_bytes: float = 0.0                        # sum of result sizes
+    wire_bytes: float = 0.0                           # ring-model per-device bytes
+    by_op_bytes: dict = field(default_factory=dict)   # op -> wire bytes
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARRAY_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result_bytes = _shape_bytes(m.group("shape"))
+        g = max(_group_size(line, num_devices), 1)
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * result_bytes
+        elif op == "all-gather":
+            wire = (g - 1) / g * result_bytes
+        elif op == "reduce-scatter":
+            wire = (g - 1) * result_bytes       # operand is g x result
+        elif op == "all-to-all":
+            wire = (g - 1) / g * result_bytes
+        else:                                   # collective-permute
+            wire = result_bytes
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.payload_bytes += result_bytes
+        stats.wire_bytes += wire
+        stats.by_op_bytes[op] = stats.by_op_bytes.get(op, 0.0) + wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    transcendentals: float
+    collectives: dict
+    collective_payload_bytes: float
+    collective_wire_bytes: float
+    compute_seconds: float
+    memory_seconds: float
+    collective_seconds: float
+    dominant: str
+    model_flops: float            # 6*N_active*D (train) / 2*N_active*D (serve)
+    model_flops_global: float
+    useful_flops_ratio: float     # model_flops_global / (flops_per_device * chips)
+    memory_stats: dict
+    fits_hbm: bool
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     num_devices: int, model_flops_global: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    trans = float(ca.get("transcendentals", 0.0))
+    colls = parse_collectives(compiled.as_text(), num_devices)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = colls.wire_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1])[0]
+    ma = compiled.memory_analysis()
+    mem_stats = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    resident = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    hlo_global = flops * num_devices
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, num_devices=num_devices,
+        flops_per_device=flops, bytes_per_device=byts, transcendentals=trans,
+        collectives=colls.counts,
+        collective_payload_bytes=colls.payload_bytes,
+        collective_wire_bytes=colls.wire_bytes,
+        compute_seconds=compute_s, memory_seconds=memory_s,
+        collective_seconds=coll_s, dominant=dominant,
+        model_flops=model_flops_global / max(num_devices, 1),
+        model_flops_global=model_flops_global,
+        useful_flops_ratio=(model_flops_global / hlo_global) if hlo_global else 0.0,
+        memory_stats=mem_stats,
+        fits_hbm=bool(resident <= HBM_PER_CHIP),
+    )
+
+
+def model_flops_for_cell(cfg, shape_name: str) -> float:
+    """6*N_active*D for training, 2*N_active*D for serving (forward-only)."""
+    from repro.configs import SHAPES
+    S, B, kind = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * S * B
+    if kind == "prefill":
+        return 2.0 * n_active * S * B
+    # decode: one token per sequence
+    return 2.0 * n_active * B

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from the dry-run/probe JSON records.
+
+  PYTHONPATH=src python -m repro.launch.report > experiments/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def _records(mesh: str, probe: bool):
+    suffix = "__probe.json" if probe else ".json"
+    out = {}
+    for p in sorted((ROOT / mesh).glob(f"*{suffix}")):
+        if probe != p.name.endswith("__probe.json"):
+            continue
+        parts = p.name.replace("__probe.json", "").replace(".json", "").split("__")
+        if len(parts) != 3:
+            continue   # tagged perf-iteration snapshots (see §Perf) are skipped
+        arch, shape, rules = parts
+        out[(arch, shape, rules)] = json.loads(p.read_text())
+    return out
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = _records(mesh, probe=False)
+    lines = [
+        f"#### Mesh `{mesh}` — compile proofs",
+        "",
+        "| arch | shape | rules | kind | compile (s) | args/dev | temp/dev | fits 16GB | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, rules), r in sorted(recs.items()):
+        ms = r["memory_stats"]
+        colls = ",".join(f"{k}:{v}" for k, v in sorted(r.get("collectives", {}).items())) or "-"
+        lines.append(
+            f"| {arch} | {shape} | {rules} | {r.get('kind','?')} "
+            f"| {r.get('compile_seconds','?')} "
+            f"| {fmt_bytes(ms['argument_bytes'])} | {fmt_bytes(ms['temp_bytes'])} "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "pod16x16", rules: str | None = None) -> str:
+    recs = _records(mesh, probe=True)
+    lines = [
+        f"#### Mesh `{mesh}` — roofline terms (per step, layer-exact probes)",
+        "",
+        "| arch | shape | rules | compute (ms) | memory (ms) | collective (ms) | dominant "
+        "| model GFLOPs | useful (6ND/HLO) | wire bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, rl), r in sorted(recs.items()):
+        if rules is not None and rl != rules:
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {rl} "
+            f"| {r['compute_seconds']*1e3:.1f} | {r['memory_seconds']*1e3:.1f} "
+            f"| {r['collective_seconds']*1e3:.1f} | **{r['dominant']}** "
+            f"| {r['model_flops_global']/1e9:,.0f} | {r['useful_flops_ratio']:.3f} "
+            f"| {fmt_bytes(r['collective_wire_bytes'])} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("pod16x16", "pod2x16x16"):
+        if (ROOT / mesh).exists():
+            print(dryrun_table(mesh))
+            print()
+    print(roofline_table("pod16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .model import (  # noqa: F401
+    ModelConfig,
+    decode_step,
+    forward_logits_last,
+    forward_loss,
+    init_cache,
+    init_params,
+    make_cache_specs,
+    model_specs,
+    prefill,
+)

@@ -1,0 +1,205 @@
+"""Shared neural-net building blocks for all assigned architectures.
+
+Pure-functional style: every component is a pair of functions
+
+  *_specs(cfg)  -> pytree of ParamSpec   (shapes + dtypes + logical axes)
+  *_apply(p, x) -> activations
+
+so the same code path serves initialization, dry-run ShapeDtypeStructs,
+sharding tables, and execution.  No Flax/Haiku — parameters are plain nested
+dicts of jax.Arrays.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import AxisRules, ParamSpec, with_logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def scan_or_loop(body, carry, xs, unroll: bool, length: int | None = None):
+    """lax.scan, or an unrolled Python loop (roofline-probe path: XLA cost
+    analysis counts while-loop bodies once, so the probe unrolls)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def init_from_specs(specs, key: jax.Array, param_dtype=jnp.float32):
+    """Materialize a ParamSpec pytree into parameter arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: ParamSpec, k):
+        dtype = spec.dtype if spec.dtype is not None else param_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "normal":
+            return (jax.random.normal(k, spec.shape) * spec.init_scale).astype(dtype)
+        if spec.init == "fan_in":
+            fan_in = spec.shape[0] if len(spec.shape) == 1 else math.prod(spec.shape[:-1])
+            return (jax.random.normal(k, spec.shape) / math.sqrt(max(fan_in, 1))).astype(dtype)
+        raise ValueError(spec.init)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int, *, axis_name: str = "embed") -> dict:
+    return {"scale": ParamSpec((dim,), (axis_name,), init="ones")}
+
+
+def rmsnorm(p: dict | None, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm; with p=None it is OLMo's non-parametric LayerNorm variant
+    (no scale / no bias), computed in fp32 for stability."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if p is not None:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def nonparametric_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo: LayerNorm without elementwise affine (arXiv:2402.00838)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def apply_norm(kind: str, p: dict | None, x: jax.Array) -> jax.Array:
+    if kind == "rms":
+        return rmsnorm(p, x)
+    if kind == "nonparametric":
+        return nonparametric_layernorm(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / output head
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, dim: int) -> dict:
+    return {"table": ParamSpec((vocab, dim), ("vocab", "embed"), init="normal")}
+
+
+def embed_lookup(p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed_logits(table_or_w: jax.Array, x: jax.Array, transpose: bool) -> jax.Array:
+    """x (..., d) -> logits (..., V).  transpose=True for tied embeddings."""
+    w = table_or_w.astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, w) if transpose else jnp.einsum("...d,dv->...v", x, w)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(dim: int, hidden: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((dim, hidden), ("embed", "mlp"), init="fan_in"),
+        "wi_up": ParamSpec((dim, hidden), ("embed", "mlp"), init="fan_in"),
+        "wo": ParamSpec((hidden, dim), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, rules: AxisRules | None,
+              activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    dt = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(dt))
+    up = jnp.einsum("...d,df->...f", x, p["wi_up"].astype(dt))
+    h = act(gate) * up
+    h = with_logical_constraint(h, ("batch", "seq", "mlp"), rules)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply rotary embeddings.  x (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # (..., S, 1, half)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (never materializes full (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+def softmax_xent_chunked(
+    x: jax.Array,            # (B, S, d) final hidden states
+    head_w: jax.Array,       # (d, V) or (V, d) if tied
+    labels: jax.Array,       # (B, S) int32
+    mask: jax.Array | None,  # (B, S) bool or None
+    tied: bool,
+    rules: AxisRules | None,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Mean token cross-entropy with seq-chunked logits (O(B*chunk*V) peak)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else (
+            jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad))))
+    elif mask is None:
+        mask = jnp.ones((B, S), bool)
+    nchunks = x.shape[1] // chunk
+    xc = x.reshape(B, nchunks, chunk, d).swapaxes(0, 1)          # (n, B, c, d)
+    lc = labels.reshape(B, nchunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, nchunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        loss_sum, count = carry
+        xb, lb, mb = inp
+        logits = unembed_logits(head_w, xb, tied)                # (B, c, V)
+        logits = with_logical_constraint(logits, ("batch", "seq", "vocab"), rules)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mb
+        return (loss_sum + nll.sum(), count + mb.sum()), None
+
+    (loss_sum, count), _ = scan_or_loop(
+        body, (jnp.float32(0), jnp.float32(0)), (xc, lc, mc), unroll)
+    return loss_sum / jnp.maximum(count, 1.0)

@@ -1,0 +1,543 @@
+"""Composable decoder-LM backbone covering all ten assigned architectures.
+
+One :class:`ModelConfig` describes any member of the pool:
+
+  dense   (qwen3-4b/8b, olmo-1b, h2o-danube-3-4b)   attn + MLP blocks
+  moe     (arctic-480b, qwen3-moe-235b-a22b)        attn + MoE (+dense residual)
+  ssm     (mamba2-1.3b)                             Mamba2 SSD blocks
+  hybrid  (zamba2-2.7b)                             Mamba2 + shared attn block
+  vlm     (paligemma-3b)                            patch-embedding frontend stub
+  audio   (musicgen-medium)                         frame-embedding frontend stub
+
+Layers are stacked and driven by ``jax.lax.scan`` (compact HLO, depth-O(1)
+compile).  Parameters are pytrees of plain arrays; ``model_specs`` yields the
+ParamSpec tree used for init, dry-run ShapeDtypeStructs and sharding tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import AxisRules, ParamSpec, with_logical_constraint
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .attention import AttnConfig, KVCache
+from .layers import (
+    apply_norm,
+    embed_lookup,
+    embed_specs,
+    init_from_specs,
+    mlp_apply,
+    mlp_specs,
+    rmsnorm_specs,
+    scan_or_loop,
+    softmax_xent_chunked,
+    unembed_logits,
+)
+from .moe import MoEConfig
+from .ssm import SSMCache, SSMConfig
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention (unused for family == "ssm")
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 10000.0
+    # mlp / moe
+    d_ff: int = 0
+    mlp_activation: str = "silu"
+    moe: MoEConfig | None = None
+    dense_residual: bool = False  # Arctic: parallel dense MLP beside MoE
+    # ssm / hybrid
+    ssm: SSMConfig | None = None
+    hybrid_attn_every: int = 0    # Zamba2: shared attn block every k layers
+    # embeddings / heads
+    norm: str = "rms"
+    tie_embeddings: bool = False
+    num_lm_heads: int = 1         # MusicGen: 4 codebook heads
+    frontend: str | None = None   # None | "patches" | "frames"
+    frontend_dim: int = 0
+    num_frontend_tokens: int = 0  # VLM: image tokens prepended
+    # execution knobs (perf levers — see EXPERIMENTS.md §Perf)
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "full"           # none | full | dots
+    q_chunk: int = 512
+    xent_chunk: int = 512
+    # unroll the layer stack as a Python loop instead of lax.scan — used by
+    # the roofline probe (XLA cost analysis counts while bodies once).
+    unroll_layers: bool = False
+    # TPU path: Pallas kernels for attention / SSD (interpret=True on CPU).
+    use_pallas: bool = False
+    attn_logits_fp32: bool = True
+    # whether long_500k applies (sub-quadratic context handling)
+    supports_long_context: bool = False
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.head_dim,
+            qk_norm=self.qk_norm, sliding_window=self.sliding_window,
+            rope_theta=self.rope_theta, q_chunk=self.q_chunk,
+            unroll=self.unroll_layers, use_pallas=self.use_pallas,
+            logits_fp32=self.attn_logits_fp32)
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def num_attn_layers(self) -> int:
+        if self.family == "ssm":
+            return 0
+        if self.family == "hybrid":
+            return self.num_layers // self.hybrid_attn_every
+        return self.num_layers
+
+    def param_count(self) -> int:
+        import math
+        leaves = jax.tree.leaves(
+            model_specs(self), is_leaf=lambda x: isinstance(x, ParamSpec))
+        return sum(math.prod(l.shape) for l in leaves)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        import math
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                model_specs(self), is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+            n = math.prod(leaf.shape)
+            keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            if any(k in ("wi_gate", "wi_up", "wo") for k in keys) and "moe" in keys:
+                n = n * self.moe.top_k // self.moe.num_experts
+            total += n
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _stack_specs(specs, n: int):
+    """Add a leading layer dim of size n to every ParamSpec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.logical_axes),
+                            dtype=s.dtype, init=s.init, init_scale=s.init_scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _block_specs(cfg: ModelConfig) -> dict:
+    """Specs for one repeated block (pre-stacking)."""
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return {"norm": rmsnorm_specs(d), "ssm": ssm_lib.ssm_specs(cfg.ssm)}
+    if cfg.family == "hybrid":
+        return {"norm": rmsnorm_specs(d), "ssm": ssm_lib.ssm_specs(cfg.ssm)}
+    block: dict = {
+        "attn_norm": rmsnorm_specs(d) if cfg.norm == "rms" else {},
+        "attn": attn_lib.attn_specs(cfg.attn_cfg),
+        "mlp_norm": rmsnorm_specs(d) if cfg.norm == "rms" else {},
+    }
+    if cfg.moe is not None:
+        block["moe"] = moe_lib.moe_specs(cfg.moe)
+        if cfg.dense_residual:
+            block["mlp"] = mlp_specs(d, cfg.d_ff)
+    else:
+        block["mlp"] = mlp_specs(d, cfg.d_ff)
+    return block
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs: dict = {}
+    if cfg.frontend is None:
+        specs["embed"] = embed_specs(cfg.vocab_size, d)
+    elif cfg.frontend == "patches":
+        specs["embed"] = embed_specs(cfg.vocab_size, d)
+        specs["frontend_proj"] = ParamSpec(
+            (cfg.frontend_dim, d), ("embed_out", "embed"), init="fan_in")
+    elif cfg.frontend == "frames":
+        specs["frontend_proj"] = ParamSpec(
+            (cfg.frontend_dim, d), ("embed_out", "embed"), init="fan_in")
+    else:
+        raise ValueError(cfg.frontend)
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        specs["blocks"] = _stack_specs(_stack_specs(_block_specs(cfg), k), groups)
+        specs["shared_attn"] = {
+            "attn_norm": rmsnorm_specs(d),
+            "attn": attn_lib.attn_specs(cfg.attn_cfg),
+            "mlp_norm": rmsnorm_specs(d),
+            "mlp": mlp_specs(d, cfg.d_ff),
+        }
+    else:
+        specs["blocks"] = _stack_specs(_block_specs(cfg), cfg.num_layers)
+
+    if cfg.norm == "rms":
+        specs["final_norm"] = rmsnorm_specs(d)
+    if not cfg.tie_embeddings:
+        if cfg.num_lm_heads == 1:
+            specs["head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"), init="fan_in")
+        else:
+            specs["head"] = ParamSpec(
+                (cfg.num_lm_heads, d, cfg.vocab_size), (None, "embed", "vocab"),
+                init="fan_in")
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_from_specs(model_specs(cfg), key, cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _transformer_block(p, x, positions, cfg: ModelConfig, rules):
+    aux = jnp.float32(0.0)
+    h = apply_norm(cfg.norm, p.get("attn_norm") or None, x)
+    x = x + attn_lib.attention_train(p["attn"], h, positions, cfg.attn_cfg, rules)
+    h = apply_norm(cfg.norm, p.get("mlp_norm") or None, x)
+    if cfg.moe is not None:
+        y, aux = moe_lib.moe_apply(p["moe"], h, cfg.moe, rules)
+        if cfg.dense_residual:
+            y = y + mlp_apply(p["mlp"], h, rules, cfg.mlp_activation)
+        x = x + y
+    else:
+        x = x + mlp_apply(p["mlp"], h, rules, cfg.mlp_activation)
+    return x, aux
+
+
+def _ssm_block(p, x, cfg: ModelConfig, rules):
+    h = apply_norm(cfg.norm, p["norm"], x)
+    return x + ssm_lib.ssm_train(p["ssm"], h, cfg.ssm, rules)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    raise ValueError(cfg.remat)
+
+
+_scan_or_loop = scan_or_loop
+
+
+def _apply_blocks_train(params, x, positions, cfg: ModelConfig, rules):
+    """Scan the stacked blocks over the sequence of layers."""
+    aux_total = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, layer_p):
+            h, aux = carry
+            h2, a = _transformer_block(layer_p, h, positions, cfg, rules)
+            return (h2, aux + a), None
+        body = _remat(body, cfg)
+        (x, aux_total), _ = _scan_or_loop(body, (x, aux_total), params["blocks"], cfg.unroll_layers)
+        return x, aux_total
+
+    if cfg.family == "ssm":
+        def body(h, layer_p):
+            return _ssm_block(layer_p, h, cfg, rules), None
+        body = _remat(body, cfg)
+        x, _ = _scan_or_loop(body, x, params["blocks"], cfg.unroll_layers)
+        return x, aux_total
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, group_p):
+            def inner(hh, layer_p):
+                return _ssm_block(layer_p, hh, cfg, rules), None
+            h, _ = _scan_or_loop(_remat(inner, cfg), h, group_p, cfg.unroll_layers)
+            # shared attention block (weights shared across groups)
+            def shared_fn(hh):
+                a = apply_norm(cfg.norm, shared["attn_norm"], hh)
+                hh = hh + attn_lib.attention_train(
+                    shared["attn"], a, positions, cfg.attn_cfg, rules)
+                m = apply_norm(cfg.norm, shared["mlp_norm"], hh)
+                return hh + mlp_apply(shared["mlp"], m, rules, cfg.mlp_activation)
+            h = _remat(lambda c, _: (shared_fn(c), None), cfg)(h, None)[0]
+            return h, None
+
+        x, _ = _scan_or_loop(group_body, x, params["blocks"], cfg.unroll_layers)
+        return x, aux_total
+
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Training forward (loss) — inputs are a dict, see repro.launch.specs
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig, rules) -> tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,d), positions (S,))."""
+    cd = cfg.compute_dtype
+    if cfg.frontend is None:
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+    elif cfg.frontend == "patches":
+        patches = batch["patches"].astype(cd)                     # (B, Simg, fd)
+        proj = jnp.einsum("bsf,fd->bsd", patches, params["frontend_proj"].astype(cd))
+        text = embed_lookup(params["embed"], batch["tokens"], cd)  # (B, Stxt, d)
+        x = jnp.concatenate([proj, text], axis=1)
+    elif cfg.frontend == "frames":
+        frames = batch["frames"].astype(cd)                       # (B, S, fd)
+        x = jnp.einsum("bsf,fd->bsd", frames, params["frontend_proj"].astype(cd))
+    else:
+        raise ValueError(cfg.frontend)
+    x = with_logical_constraint(x, ("batch", "seq", "act_embed"), rules)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, positions
+
+
+def _head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"], True
+    return params["head"], False
+
+
+def forward_logits_last(params, batch: dict, cfg: ModelConfig,
+                        rules: AxisRules | None) -> jax.Array:
+    """Logits at the final position of a full (non-cached) forward pass.
+
+    Oracle for the prefill/decode consistency tests: must match one
+    ``decode_step`` after ``prefill`` on the same prefix.
+    """
+    x, positions = embed_inputs(params, batch, cfg, rules)
+    x, _ = _apply_blocks_train(params, x, positions, cfg, rules)
+    x = apply_norm(cfg.norm, params.get("final_norm"), x)
+    last = x[:, -1:, :]
+    head_w, tied = _head_weight(params, cfg)
+    if cfg.num_lm_heads == 1:
+        return unembed_logits(head_w, last, tied)
+    return jnp.stack(
+        [unembed_logits(head_w[h], last, False) for h in range(cfg.num_lm_heads)],
+        axis=2)
+
+
+def forward_loss(params, batch: dict, cfg: ModelConfig, rules: AxisRules | None) -> jax.Array:
+    """Mean-token cross entropy (+ MoE aux loss)."""
+    x, positions = embed_inputs(params, batch, cfg, rules)
+    x, aux = _apply_blocks_train(params, x, positions, cfg, rules)
+    if cfg.norm == "rms":
+        x = apply_norm(cfg.norm, params["final_norm"], x)
+    else:
+        x = apply_norm(cfg.norm, None, x)
+
+    labels = batch["labels"]
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    head_w, tied = _head_weight(params, cfg)
+
+    if cfg.num_lm_heads == 1:
+        if cfg.frontend == "patches":
+            # loss only over text positions (suffix)
+            x = x[:, -labels.shape[1]:, :]
+        loss = softmax_xent_chunked(
+            x, head_w, labels, mask, tied, rules, cfg.xent_chunk,
+            unroll=cfg.unroll_layers)
+    else:
+        # MusicGen: one head per codebook; labels (B, S, num_heads).
+        losses = []
+        for h in range(cfg.num_lm_heads):
+            losses.append(softmax_xent_chunked(
+                x, head_w[h], labels[..., h], mask[..., h], False, rules,
+                cfg.xent_chunk, unroll=cfg.unroll_layers))
+        loss = jnp.stack(losses).mean()
+    return loss + aux.astype(loss.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode (see repro.serve for the step wrappers)
+# ---------------------------------------------------------------------------
+
+def make_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ParamSpec pytree for the decode cache (stacked over layers)."""
+    cd = cfg.compute_dtype
+    if cfg.family == "ssm":
+        return {"ssm": _stack_specs(ssm_lib.ssm_cache_specs(cfg.ssm, batch, cd)._asdict(),
+                                    cfg.num_layers)}
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        return {
+            "ssm": _stack_specs(_stack_specs(
+                ssm_lib.ssm_cache_specs(cfg.ssm, batch, cd)._asdict(), k), groups),
+            "attn": _stack_specs(
+                attn_lib.kv_cache_specs(cfg.attn_cfg, batch, max_len, cd)._asdict(),
+                groups),
+        }
+    return {"attn": _stack_specs(
+        attn_lib.kv_cache_specs(cfg.attn_cfg, batch, max_len, cd)._asdict(),
+        cfg.num_layers)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    specs = make_cache_specs(cfg, batch, max_len)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def decode_step(params, batch: dict, cache, cfg: ModelConfig, rules: AxisRules | None):
+    """One new token for every sequence in the batch.
+
+    batch: {"tokens": (B, 1)} (or frames/patch-free equivalents).
+    cache: pytree from make_cache_specs / prefill.
+    Returns (logits (B, 1, [heads,] V), new_cache).
+    """
+    cd = cfg.compute_dtype
+    if cfg.frontend == "frames":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cd),
+                       params["frontend_proj"].astype(cd))
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            layer_p, c = xs
+            hn = apply_norm(cfg.norm, layer_p["norm"], h)
+            y, c2 = ssm_lib.ssm_decode(layer_p["ssm"], hn, SSMCache(**c), cfg.ssm, rules)
+            return h + y, {"state": c2.state, "conv": c2.conv, "length": c2.length}
+        x, new_ssm = _scan_or_loop(body, x, (params["blocks"], cache["ssm"]), cfg.unroll_layers)
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        shared = params["shared_attn"]
+
+        def group_body(h, xs):
+            group_p, ssm_c, attn_c = xs
+            def inner(hh, ys):
+                layer_p, c = ys
+                hn = apply_norm(cfg.norm, layer_p["norm"], hh)
+                y, c2 = ssm_lib.ssm_decode(layer_p["ssm"], hn, SSMCache(**c), cfg.ssm, rules)
+                return hh + y, {"state": c2.state, "conv": c2.conv, "length": c2.length}
+            h, new_ssm_c = jax.lax.scan(inner, h, (group_p, ssm_c))
+            a = apply_norm(cfg.norm, shared["attn_norm"], h)
+            y, kv2 = attn_lib.attention_decode(
+                shared["attn"], a, KVCache(**attn_c), cfg.attn_cfg, rules)
+            h = h + y
+            m = apply_norm(cfg.norm, shared["mlp_norm"], h)
+            h = h + mlp_apply(shared["mlp"], m, rules, cfg.mlp_activation)
+            return h, (new_ssm_c, {"k": kv2.k, "v": kv2.v, "length": kv2.length})
+
+        x, (new_ssm, new_attn) = _scan_or_loop(
+            group_body, x, (params["blocks"], cache["ssm"], cache["attn"]), cfg.unroll_layers)
+        new_cache = {"ssm": new_ssm, "attn": new_attn}
+    else:
+        # NOTE (§Perf iteration B3, refuted): carrying the stacked cache
+        # through the scan carry and writing only the new token measured
+        # WORSE on the compiled artifact (the partitioner reshards the
+        # carried cache: collective 0.36ms -> 2641ms) — the ys-based copy
+        # below is already buffer-aliased by XLA.  See EXPERIMENTS.md.
+        def body(h, xs):
+            layer_p, c = xs
+            hn = apply_norm(cfg.norm, layer_p.get("attn_norm") or None, h)
+            y, kv2 = attn_lib.attention_decode(
+                layer_p["attn"], hn, KVCache(**c), cfg.attn_cfg, rules)
+            h = h + y
+            m = apply_norm(cfg.norm, layer_p.get("mlp_norm") or None, h)
+            if cfg.moe is not None:
+                ym = moe_lib.moe_decode(layer_p["moe"], m, cfg.moe, rules)
+                if cfg.dense_residual:
+                    ym = ym + mlp_apply(layer_p["mlp"], m, rules, cfg.mlp_activation)
+                h = h + ym
+            else:
+                h = h + mlp_apply(layer_p["mlp"], m, rules, cfg.mlp_activation)
+            return h, {"k": kv2.k, "v": kv2.v, "length": kv2.length}
+        x, new_attn = _scan_or_loop(body, x, (params["blocks"], cache["attn"]), cfg.unroll_layers)
+        new_cache = {"attn": new_attn}
+
+    x = apply_norm(cfg.norm, params.get("final_norm"), x)
+    head_w, tied = _head_weight(params, cfg)
+    if cfg.num_lm_heads == 1:
+        logits = unembed_logits(head_w, x, tied)
+    else:
+        logits = jnp.stack(
+            [unembed_logits(head_w[h], x, False) for h in range(cfg.num_lm_heads)],
+            axis=2)  # (B, 1, heads, V)
+    return logits, new_cache
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, rules: AxisRules | None,
+            max_len: int | None = None):
+    """Score a full prompt and build the decode cache.
+
+    Implemented as the chunked-causal forward plus per-layer cache capture.
+    Returns (last_hidden (B, d), cache).
+    """
+    x, positions = embed_inputs(params, batch, cfg, rules)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    cd = cfg.compute_dtype
+
+    if cfg.family == "ssm":
+        def body(h, layer_p):
+            hn = apply_norm(cfg.norm, layer_p["norm"], h)
+            y, st = ssm_lib.ssm_train_with_state(layer_p["ssm"], hn, cfg.ssm, rules)
+            return h + y, st
+        x, states = _scan_or_loop(body, x, params["blocks"], cfg.unroll_layers)
+        cache = {"ssm": states}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, group_p):
+            def inner(hh, layer_p):
+                hn = apply_norm(cfg.norm, layer_p["norm"], hh)
+                y, st = ssm_lib.ssm_train_with_state(layer_p["ssm"], hn, cfg.ssm, rules)
+                return hh + y, st
+            h, states = _scan_or_loop(inner, h, group_p, cfg.unroll_layers)
+            a = apply_norm(cfg.norm, shared["attn_norm"], h)
+            y, kv = attn_lib.attention_train_with_kv(
+                shared["attn"], a, positions, cfg.attn_cfg, rules, max_len)
+            h = h + y
+            m = apply_norm(cfg.norm, shared["mlp_norm"], h)
+            h = h + mlp_apply(shared["mlp"], m, rules, cfg.mlp_activation)
+            return h, (states, kv)
+        x, (states, kvs) = _scan_or_loop(group_body, x, params["blocks"], cfg.unroll_layers)
+        cache = {"ssm": states, "attn": kvs}
+    else:
+        def body(h, layer_p):
+            hn = apply_norm(cfg.norm, layer_p.get("attn_norm") or None, h)
+            y, kv = attn_lib.attention_train_with_kv(
+                layer_p["attn"], hn, positions, cfg.attn_cfg, rules, max_len)
+            h = h + y
+            m = apply_norm(cfg.norm, layer_p.get("mlp_norm") or None, h)
+            if cfg.moe is not None:
+                ym, _ = moe_lib.moe_apply(layer_p["moe"], m, cfg.moe, rules)
+                if cfg.dense_residual:
+                    ym = ym + mlp_apply(layer_p["mlp"], m, rules, cfg.mlp_activation)
+                h = h + ym
+            else:
+                h = h + mlp_apply(layer_p["mlp"], m, rules, cfg.mlp_activation)
+            return h, kv
+        x, kvs = _scan_or_loop(body, x, params["blocks"], cfg.unroll_layers)
+        cache = {"attn": kvs}
+
+    x = apply_norm(cfg.norm, params.get("final_norm"), x)
+    return x[:, -1, :], cache

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm (the TPU-friendly formulation):
+
+  per step t:  h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t      a_t = exp(dt_t * A)
+               y_t = C_t . h_t + D * x_t
+
+Sequence is split into chunks of length Q.  Within a chunk the recurrence is
+expanded into an attention-like masked matmul (MXU work); across chunks a
+``lax.scan`` carries the (B, H, P, N) state.  Decode is the O(1) recurrence.
+
+The intra-chunk matmul is the compute hot-spot; ``repro.kernels.ssd`` holds
+the Pallas TPU kernel, this file is the XLA reference path (also the oracle).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import AxisRules, ParamSpec, with_logical_constraint
+from .layers import rmsnorm, scan_or_loop
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int          # expand * d_model
+    headdim: int          # P
+    d_state: int          # N
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    unroll: bool = False
+    use_pallas: bool = False
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def ssm_specs(cfg: SSMConfig) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.num_heads
+    conv_ch = di + 2 * N
+    return {
+        "in_proj_zx": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), init="fan_in"),
+        "in_proj_bc": ParamSpec((d, 2 * N), ("embed", "ssm_state"), init="fan_in"),
+        "in_proj_dt": ParamSpec((d, H), ("embed", "ssm_heads"), init="fan_in"),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), ("conv_width", "ssm_inner"), init="fan_in"),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm": {"scale": ParamSpec((di,), ("ssm_inner",), init="ones")},
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), init="fan_in"),
+    }
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (B, H, P, N) fp32 recurrent state
+    conv: jax.Array       # (B, W-1, conv_ch) last conv inputs
+    length: jax.Array     # scalar int32
+
+
+def ssm_cache_specs(cfg: SSMConfig, batch: int, dtype) -> SSMCache:
+    H, P, N = cfg.num_heads, cfg.headdim, cfg.d_state
+    conv_ch = cfg.d_inner + 2 * N
+    return SSMCache(
+        state=ParamSpec((batch, H, P, N), ("batch", "ssm_heads", None, "ssm_state"),
+                        dtype=jnp.float32, init="zeros"),
+        conv=ParamSpec((batch, cfg.conv_width - 1, conv_ch),
+                       ("batch", None, "ssm_inner"), dtype=dtype, init="zeros"),
+        length=ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    )
+
+
+def _split_proj(p: dict, u: jax.Array, cfg: SSMConfig):
+    dt_ = u.dtype
+    zx = jnp.einsum("bsd,de->bse", u, p["in_proj_zx"].astype(dt_))
+    z, x = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", u, p["in_proj_bc"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, p["in_proj_dt"].astype(dt_))
+    return z, x, bc, dt_raw
+
+
+def _conv_mix(p: dict, xbc: jax.Array, cfg: SSMConfig) -> jax.Array:
+    """Depthwise causal conv1d, width W, over (B, S, C)."""
+    W = cfg.conv_width
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(W):
+        out = out + pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i].astype(xbc.dtype)
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def ssm_train(p: dict, u: jax.Array, cfg: SSMConfig, rules: AxisRules | None) -> jax.Array:
+    """Full-sequence SSD. u (B, S, d_model) -> (B, S, d_model)."""
+    y, _ = _ssm_forward(p, u, cfg, rules)
+    return y
+
+
+def ssm_train_with_state(p: dict, u: jax.Array, cfg: SSMConfig,
+                         rules: AxisRules | None) -> tuple[jax.Array, dict]:
+    """Full-sequence SSD that also returns the decode cache (prefill path)."""
+    y, cache = _ssm_forward(p, u, cfg, rules, want_state=True)
+    return y, cache
+
+
+def _ssm_forward(p: dict, u: jax.Array, cfg: SSMConfig, rules: AxisRules | None,
+                 want_state: bool = False):
+    B, S, _ = u.shape
+    H, P, N, Q = cfg.num_heads, cfg.headdim, cfg.d_state, min(cfg.chunk, u.shape[1])
+    if S % Q:
+        Q = S               # irregular length: single chunk
+    z, x, bc, dt_raw = _split_proj(p, u, cfg)
+    xbc_raw = jnp.concatenate([x, bc], axis=-1)
+    xbc = _conv_mix(p, xbc_raw, cfg)
+    x, bc = xbc[..., : cfg.d_inner], xbc[..., cfg.d_inner :]
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)                       # (B, S, N) each
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max)                    # (B, S, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    log_a = dt * A[None, None, :]                                # (B, S, H) <= 0
+
+    xh = x.reshape(B, S, H, P)
+
+    if cfg.use_pallas and not want_state:
+        from repro.kernels.ops import ssd_mix
+        y = ssd_mix(xh, dt, log_a, Bmat, Cmat, chunk=Q)
+        return _ssm_epilogue(p, u, y, xh, z, cfg, rules), None
+
+    nc = S // Q
+
+    def chunk_view(t, shape):
+        return t.reshape(B, nc, Q, *shape).swapaxes(0, 1)        # (nc, B, Q, ...)
+
+    xc = chunk_view(xh, (H, P))
+    bC = chunk_view(Bmat, (N,))
+    cC = chunk_view(Cmat, (N,))
+    dtc = chunk_view(dt, (H,))
+    lac = chunk_view(log_a, (H,))
+
+    def chunk_body(state, inp):
+        xq, bq, cq, dtq, laq = inp                               # (B,Q,...)
+        lcum = jnp.cumsum(laq, axis=1)                           # (B,Q,H) inclusive
+        # intra-chunk: M[t,s] = (C_t.B_s) * exp(lcum_t - lcum_s) * dt_s, s<=t
+        scores = jnp.einsum("btn,bsn->bts", cq, bq)              # (B,Q,Q)
+        decay = lcum[:, :, None, :] - lcum[:, None, :, :]        # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        m = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        w = scores[..., None] * m * dtq[:, None, :, :]           # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w.astype(xq.dtype), xq)
+        # inter-chunk: y_inter[t] = exp(lcum_t) * (C_t . state_carried)
+        y_inter = jnp.einsum("btn,bhpn->bthp", cq.astype(jnp.float32), state)
+        y_inter = y_inter * jnp.exp(lcum)[:, :, :, None]         # (B,Q,H,P)
+        # state update: new_state = exp(l_end)*state + sum_s exp(l_end - l_s) dt_s B_s (x) x_s
+        l_end = lcum[:, -1, :]                                   # (B,H)
+        carry_decay = jnp.exp(l_end)[:, :, None, None]           # (B,H,1,1)
+        w_state = jnp.exp(l_end[:, None, :] - lcum) * dtq        # (B,Q,H)
+        bx = jnp.einsum("bqh,bqn,bqhp->bhpn",
+                        w_state, bq.astype(jnp.float32), xq.astype(jnp.float32))
+        new_state = carry_decay * state + bx
+        y = y_intra.astype(jnp.float32) + y_inter
+        return new_state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, ys = scan_or_loop(chunk_body, state0, (xc, bC, cC, dtc, lac), cfg.unroll)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    out = _ssm_epilogue(p, u, y, xh, z, cfg, rules)
+    if not want_state:
+        return out, None
+    cache = {
+        "state": final_state,
+        "conv": xbc_raw[:, S - (cfg.conv_width - 1):, :],
+        "length": jnp.int32(S),
+    }
+    return out, cache
+
+
+def _ssm_epilogue(p, u, y, xh, z, cfg: SSMConfig, rules):
+    """D-skip, gating, norm, out-projection shared by XLA and Pallas paths."""
+    B, S, _ = u.shape
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    y = with_logical_constraint(y, ("batch", "seq", "ssm_inner"), rules)
+    return jnp.einsum("be,ed->bd", y.reshape(-1, cfg.d_inner),
+                      p["out_proj"].astype(u.dtype)).reshape(B, S, cfg.d_model)
+
+
+def ssm_decode(p: dict, u: jax.Array, cache: SSMCache, cfg: SSMConfig,
+               rules: AxisRules | None) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrence. u (B, 1, d_model)."""
+    B = u.shape[0]
+    H, P, N = cfg.num_heads, cfg.headdim, cfg.d_state
+    z, x, bc, dt_raw = _split_proj(p, u, cfg)
+    xbc = jnp.concatenate([x, bc], axis=-1)[:, 0, :]             # (B, C)
+    conv_in = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, W, C)
+    mixed = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+    mixed = jax.nn.silu(mixed + p["conv_b"].astype(jnp.float32)).astype(u.dtype)
+    x1, bc1 = mixed[..., : cfg.d_inner], mixed[..., cfg.d_inner :]
+    Bv, Cv = jnp.split(bc1, 2, axis=-1)                          # (B, N)
+
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max)                    # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                                 # (B, H)
+
+    xh = x1.reshape(B, H, P).astype(jnp.float32)
+    bx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv.astype(jnp.float32), xh)
+    new_state = a[:, :, None, None] * cache.state + bx
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), new_state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(u.dtype))
+    new_conv = conv_in[:, 1:, :]
+    return out, SSMCache(state=new_state, conv=new_conv, length=cache.length + 1)

@@ -1,0 +1,111 @@
+"""Batched serving engine over the prefill/decode substrate.
+
+Wave-based static batching (the scheme the decode_32k dry-run cells lower):
+requests are grouped into fixed-size waves, right-padded to a common prompt
+length, prefilled once, then decoded lock-step with per-request stopping.
+Finished requests exit the wave; the engine reports per-wave utilization so
+the multi-tenant service can cost serving trials the same way it costs
+training trials.
+
+(Continuous batching needs per-slot cache lengths — a ragged-cache layout —
+which the ring-buffer cache doesn't support; noted as future work in
+DESIGN.md.  Static waves are what the 32k/500k dry-run shapes model.)
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig, decode_step, prefill
+
+
+@dataclass
+class Request:
+    request_id: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 512
+    pad_id: int = 0
+
+
+class StaticBatchEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig | None = None,
+                 rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve_cfg or ServeConfig()
+        self.rules = rules
+        self.queue: list[Request] = []
+        self.stats = {"waves": 0, "decode_steps": 0, "slot_steps_used": 0,
+                      "slot_steps_total": 0, "wall": 0.0}
+        self._decode = jax.jit(
+            lambda p, b, c: decode_step(p, b, c, self.cfg, self.rules))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _next_wave(self) -> list[Request]:
+        wave, self.queue = (self.queue[: self.serve.batch_slots],
+                            self.queue[self.serve.batch_slots:])
+        return wave
+
+    def run(self) -> list[Request]:
+        done: list[Request] = []
+        while self.queue:
+            done.extend(self._run_wave(self._next_wave()))
+        return done
+
+    def _run_wave(self, wave: list[Request]) -> list[Request]:
+        t0 = time.perf_counter()
+        B = len(wave)
+        plen = max(len(r.tokens) for r in wave)
+        toks = np.full((B, plen), self.serve.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.tokens):] = r.tokens   # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        max_new = max(r.max_new_tokens for r in wave)
+        _, cache = prefill(self.params, batch, self.cfg, self.rules,
+                           max_len=min(plen + max_new + 8, self.serve.max_len))
+
+        last = jnp.asarray(toks[:, -1:])
+        active = np.ones(B, bool)
+        for step in range(max_new):
+            logits, cache = self._decode(self.params, {"tokens": last}, cache)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            self.stats["decode_steps"] += 1
+            self.stats["slot_steps_total"] += B
+            self.stats["slot_steps_used"] += int(active.sum())
+            for i, r in enumerate(wave):
+                if not active[i]:
+                    continue
+                r.output.append(int(nxt[i]))
+                if (r.eos_id is not None and nxt[i] == r.eos_id) or \
+                        len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    active[i] = False
+            if not active.any():
+                break
+            last = jnp.asarray(nxt[:, None])
+        for r in wave:
+            r.done = True
+        self.stats["waves"] += 1
+        self.stats["wall"] += time.perf_counter() - t0
+        return wave
+
+    @property
+    def slot_utilization(self) -> float:
+        tot = self.stats["slot_steps_total"]
+        return self.stats["slot_steps_used"] / tot if tot else 1.0

@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, adamw_init, adamw_update, global_norm, lr_at  # noqa: F401
+from .train_step import TrainState, make_train_step, train_state_specs  # noqa: F401

@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+For cross-pod (DCI) gradient reduction the wire is ~10x slower than intra-pod
+ICI, so pods exchange int8-quantized gradients.  Per-tensor symmetric
+quantization with an error-feedback accumulator (Seide et al. / EF-SGD
+style): the quantization residual is carried into the next step, so the
+scheme is unbiased in the long run and training quality is preserved.
+
+Usage inside a shard_map'd step (pseudo):
+
+    q, scale, err = quantize_ef(grad + err)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), "pod")
+    grad = dequantize(q_sum, scale_sum) / num_pods
+
+The pure functions below are the unit; tests/test_compress.py checks the
+error-feedback contraction property and end-to-end quantized-SGD convergence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor quantization. Returns (int8 codes, fp32 scale)."""
+    assert bits == 8, "int8 only"
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_ef(x: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback quantization: returns (codes, scale, new_err).
+
+    new_err = (x + err) - dequantize(codes) — carried into the next step.
+    """
+    comp = x.astype(jnp.float32) + err
+    q, scale = quantize(comp)
+    new_err = comp - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def compress_tree(grads, errs):
+    """Tree-map quantize_ef; returns (codes_tree, scales_tree, new_errs)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs)
+    out = [quantize_ef(g, e) for g, e in zip(flat_g, flat_e)]
+    unf = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    return unf(0), unf(1), unf(2)
+
+
+def decompress_tree(codes, scales):
+    return jax.tree.map(dequantize, codes, scales)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes_saved(params) -> tuple[int, int]:
+    """(fp32 bytes, int8 bytes) for one gradient exchange — the 4x DCI win."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    return 4 * n, n + 4 * len(jax.tree.leaves(params))

@@ -1,0 +1,43 @@
+"""The jitted training step: loss -> grad -> clip -> AdamW.
+
+Data parallelism needs no explicit collectives: the batch is sharded over
+("pod", "data"), so XLA's SPMD partitioner inserts the gradient
+reduce-scatter/all-reduce automatically (hierarchical across pods when the
+"pod" axis is present).  TP/EP collectives likewise come from the sharding
+annotations in the model code.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, forward_loss, model_specs
+from repro.sharding.rules import AxisRules
+from .optimizer import OptConfig, adamw_state_specs, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: dict
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    ps = model_specs(cfg)
+    return TrainState(params=ps, opt=adamw_state_specs(ps, opt_cfg))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, rules: AxisRules | None):
+    """Returns train_step(state, batch) -> (state, metrics).  Donate state."""
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_loss(p, batch, cfg, rules))(state.params)
+        new_params, new_opt, metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_psd(rng, n: int, scale: float = 1.0) -> np.ndarray:
+    A = rng.standard_normal((n, n))
+    K = A @ A.T / n + 0.25 * np.eye(n)
+    return scale * K

@@ -1,0 +1,81 @@
+"""EI / EIrate (eqs. 3-6) and Lemma 1."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ei import (
+    choose_next,
+    ei_total,
+    eirate_scores,
+    expected_improvement,
+    tau,
+)
+
+
+def test_lemma1_against_monte_carlo(rng):
+    """E[max(X - a, 0)] = sigma * tau((mu - a)/sigma) for X ~ N(mu, sigma^2)."""
+    for mu, sigma, a in [(0.0, 1.0, 0.5), (1.2, 0.3, 1.0), (-0.5, 2.0, 0.0)]:
+        xs = rng.normal(mu, sigma, size=2_000_000)
+        mc = np.maximum(xs - a, 0.0).mean()
+        cf = float(expected_improvement(
+            jnp.float32(mu), jnp.float32(sigma), jnp.float32(a)))
+        assert abs(mc - cf) < 5e-3, (mu, sigma, a, mc, cf)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-20, 20))
+def test_tau_properties(x):
+    """tau(u) >= max(u, 0), monotone nondecreasing, tau(u) - tau(-u) = u."""
+    t = float(tau(jnp.float32(x)))
+    assert t >= max(x, 0.0) - 1e-4
+    assert abs((t - float(tau(jnp.float32(-x)))) - x) < 1e-3
+    assert float(tau(jnp.float32(x + 0.1))) >= t - 1e-5
+
+
+def test_sigma_zero_degenerates_to_plus_part():
+    ei = expected_improvement(
+        jnp.asarray([1.0, 0.2]), jnp.asarray([0.0, 0.0]), jnp.asarray(0.5))
+    np.testing.assert_allclose(np.asarray(ei), [0.5, 0.0], atol=1e-6)
+
+
+def test_ei_total_sums_over_owners(rng):
+    n, N = 6, 3
+    mu = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sigma = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32)) + 0.1
+    best = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    member = np.zeros((N, n), bool)
+    member[0, :4] = True
+    member[1, 2:] = True      # overlap on models 2,3
+    member[2, 0] = True
+    total = np.asarray(ei_total(mu, sigma, best, jnp.asarray(member)))
+    per_user = [np.asarray(ei_total(mu, sigma, best[i:i+1],
+                                    jnp.asarray(member[i:i+1]))) for i in range(N)]
+    np.testing.assert_allclose(total, sum(per_user), atol=1e-5)
+
+
+def test_eirate_masks_selected_and_divides_cost(rng):
+    n, N = 5, 2
+    mu = jnp.zeros(n)
+    sigma = jnp.ones(n)
+    best = jnp.zeros(N)
+    member = jnp.ones((N, n), bool)
+    cost = jnp.asarray([1.0, 2.0, 4.0, 1.0, 1.0])
+    selected = jnp.asarray([False, False, False, True, False])
+    scores = np.asarray(eirate_scores(mu, sigma, best, member, cost, selected))
+    assert scores[3] == -np.inf
+    assert abs(scores[0] / scores[1] - 2.0) < 1e-5
+    assert abs(scores[0] / scores[2] - 4.0) < 1e-5
+    idx, val = choose_next(mu, sigma, best, member, cost, selected)
+    assert int(idx) in (0, 4) and np.isfinite(float(val))
+
+
+def test_cheap_model_preferred_at_equal_ei():
+    """EIrate (eq. 5) is the tie-breaker the paper adds over plain EI."""
+    n = 2
+    mu, sigma = jnp.zeros(n), jnp.ones(n)
+    best = jnp.zeros(1)
+    member = jnp.ones((1, n), bool)
+    cost = jnp.asarray([10.0, 1.0])
+    idx, _ = choose_next(mu, sigma, best, member, cost, jnp.zeros(n, bool))
+    assert int(idx) == 1

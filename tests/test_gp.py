@@ -1,0 +1,91 @@
+"""GP posterior engines vs the closed form (Supplemental A)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gp import IncrementalGP, posterior_masked
+
+from conftest import random_psd
+
+
+def closed_form(K, mu0, z, obs, jitter=1e-6):
+    obs = list(obs)
+    Koo = K[np.ix_(obs, obs)] + jitter * np.eye(len(obs))
+    Kxo = K[:, obs]
+    sol = np.linalg.solve(Koo, z[obs] - mu0[obs])
+    mu = mu0 + Kxo @ sol
+    var = np.diag(K) - np.einsum("ij,jk,ik->i", Kxo, np.linalg.inv(Koo), Kxo)
+    return mu, np.maximum(var, 0.0)
+
+
+@pytest.mark.parametrize("n,k", [(8, 3), (20, 12), (5, 5)])
+def test_masked_matches_closed_form(rng, n, k):
+    K = random_psd(rng, n)
+    mu0 = rng.standard_normal(n)
+    z = rng.standard_normal(n)
+    obs = rng.choice(n, size=k, replace=False)
+    mask = np.zeros(n, bool)
+    mask[obs] = True
+    mu, var = posterior_masked(
+        jnp.asarray(K, jnp.float32), jnp.asarray(mu0, jnp.float32),
+        jnp.asarray(z, jnp.float32), jnp.asarray(mask))
+    mu_ref, var_ref = closed_form(K, mu0, z, obs)
+    np.testing.assert_allclose(np.asarray(mu), mu_ref, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(var), var_ref, atol=2e-4)
+
+
+def test_incremental_matches_masked_any_order(rng):
+    n = 15
+    K = random_psd(rng, n)
+    mu0 = rng.standard_normal(n)
+    z = rng.standard_normal(n)
+    for order_seed in range(3):
+        order = np.random.default_rng(order_seed).permutation(n)[:9]
+        gp = IncrementalGP(K.astype(np.float32), mu0.astype(np.float32))
+        for i in order:
+            gp.observe(int(i), float(z[i]))
+        mu_i, var_i = gp.posterior()
+        mu_ref, var_ref = closed_form(K, mu0, z, list(order))
+        np.testing.assert_allclose(np.asarray(mu_i), mu_ref, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(var_i), var_ref, atol=3e-4)
+
+
+def test_posterior_interpolates_observations(rng):
+    n = 10
+    K = random_psd(rng, n)
+    z = rng.standard_normal(n)
+    gp = IncrementalGP(K.astype(np.float32), np.zeros(n, np.float32))
+    for i in (2, 5, 7):
+        gp.observe(i, float(z[i]))
+    mu, var = gp.posterior()
+    for i in (2, 5, 7):
+        assert abs(float(mu[i]) - z[i]) < 1e-2
+        assert float(var[i]) < 1e-2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 1_000_000))
+def test_variance_never_increases(n, seed):
+    """Conditioning reduces (marginal) variance — the property Theorem 2's
+    proof leans on (eq. 13)."""
+    rng = np.random.default_rng(seed)
+    K = random_psd(rng, n)
+    z = rng.standard_normal(n)
+    gp = IncrementalGP(K.astype(np.float32), np.zeros(n, np.float32))
+    prev_var = np.asarray(gp.posterior()[1])
+    order = rng.permutation(n)
+    for i in order:
+        gp.observe(int(i), float(z[i]))
+        var = np.asarray(gp.posterior()[1])
+        assert (var <= prev_var + 1e-3).all()
+        prev_var = var
+
+
+def test_duplicate_observation_rejected(rng):
+    K = random_psd(rng, 4)
+    gp = IncrementalGP(K.astype(np.float32), np.zeros(4, np.float32))
+    gp.observe(1, 0.5)
+    with pytest.raises(ValueError):
+        gp.observe(1, 0.7)

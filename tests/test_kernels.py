@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+# --- EIrate -------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,N,bm,bu", [
+    (64, 8, 64, 8), (200, 33, 64, 16), (513, 100, 128, 64), (17, 3, 256, 256),
+])
+def test_eirate_kernel_sweep(rng, n, N, bm, bu):
+    mu = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    sg = sg.at[: n // 4].set(0.0)                      # degenerate sigmas
+    best = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    mem = jnp.asarray(rng.random((N, n)) < 0.4)
+    cost = jnp.asarray(rng.uniform(0.3, 3.0, n), jnp.float32)
+    sel = jnp.asarray(rng.random(n) < 0.25)
+    got = ops.eirate(mu, sg, best, mem, cost, sel,
+                     block_models=bm, block_users=bu, interpret=True)
+    want = ref.eirate_ref(mu, sg, best, mem, cost, sel)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# --- GP readout ----------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n,bk,bn", [
+    (32, 64, 32, 64), (100, 257, 64, 128), (7, 1024, 512, 512), (512, 33, 128, 32),
+])
+def test_gp_readout_kernel_sweep(rng, k, n, bk, bn):
+    W = jnp.asarray(rng.standard_normal((k, n)) * 0.3, jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(k), jnp.float32)
+    mu0 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    kd = (W * W).sum(0) + jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    m1, v1 = ops.gp_readout(W, alpha, mu0, kd, block_n=bn, block_k=bk, interpret=True)
+    m2, v2 = ref.gp_readout_ref(W, alpha, mu0, kd)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=2e-4, rtol=2e-4)
+
+
+# --- flash attention --------------------------------------------------------------
+
+@pytest.mark.parametrize("S,Hq,Hkv,D,window,dtype", [
+    (128, 4, 4, 32, None, jnp.float32),     # MHA
+    (256, 8, 2, 16, None, jnp.float32),     # GQA 4:1
+    (128, 4, 1, 32, None, jnp.float32),     # MQA
+    (256, 4, 2, 32, 64, jnp.float32),       # sliding window
+    (128, 4, 2, 32, None, jnp.bfloat16),    # bf16
+])
+def test_flash_attention_sweep(rng, S, Hq, Hkv, D, window, dtype):
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_blocks_divide_requirement(rng):
+    q = jnp.asarray(rng.standard_normal((1, 96, 2, 16)), jnp.float32)
+    with pytest.raises(AssertionError):
+        ops.flash_attention(q, q, q, block_q=64, block_k=64, interpret=True)
+
+
+# --- SSD ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,P,N,chunk,dtype", [
+    (64, 2, 16, 8, 16, jnp.float32),
+    (128, 4, 32, 16, 32, jnp.float32),
+    (96, 3, 16, 8, 32, jnp.float32),
+    (64, 2, 16, 8, 64, jnp.float32),        # single chunk
+    (64, 2, 16, 8, 16, jnp.bfloat16),
+])
+def test_ssd_kernel_sweep(rng, S, H, P, N, chunk, dtype):
+    B = 2
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (B, S, H)), jnp.float32)
+    la = -dt * jnp.asarray(rng.uniform(0.5, 2.0, (1, 1, H)), jnp.float32)
+    la = jnp.broadcast_to(la, (B, S, H))
+    b = jnp.asarray(rng.standard_normal((B, S, N)), dtype)
+    c = jnp.asarray(rng.standard_normal((B, S, N)), dtype)
+    got = ops.ssd_mix(x, dt, la, b, c, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt, la, b, c)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+# --- model-level XLA paths vs the same oracles ------------------------------------
+
+def test_model_ssd_chunked_matches_recurrence(rng):
+    """The substrate's chunked SSD (models/ssm.py) against the step oracle."""
+    from repro.models.ssm import SSMConfig, ssm_specs, ssm_train
+    from repro.models.layers import init_from_specs
+    cfg = SSMConfig(d_model=32, d_inner=64, headdim=16, d_state=8, chunk=16)
+    p = init_from_specs(ssm_specs(cfg), jax.random.PRNGKey(0))
+    u = jnp.asarray(rng.standard_normal((2, 64, 32)), jnp.float32)
+
+    out_16 = ssm_train(p, u, cfg, None)
+    out_64 = ssm_train(p, u, cfg._replace(chunk=64), None)   # single chunk
+    np.testing.assert_allclose(np.asarray(out_16), np.asarray(out_64),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_model_attention_chunked_matches_ref(rng):
+    from repro.models.attention import AttnConfig, attn_specs, attention_train
+    from repro.models.layers import init_from_specs, rope
+    cfg = AttnConfig(d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+                     q_chunk=16)
+    p = init_from_specs(attn_specs(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.standard_normal((2, 64, 32)), jnp.float32)
+    pos = jnp.arange(64)
+    y_chunked = attention_train(p, x, pos, cfg, None)
+    y_full = attention_train(p, x, pos, cfg._replace(q_chunk=64), None)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_full),
+                               atol=1e-4, rtol=1e-4)

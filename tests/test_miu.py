@@ -1,0 +1,90 @@
+"""Maximum Incremental Uncertainty (Section 5.1)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.miu import (
+    miu_cumulative_exact,
+    miu_diag_paper_bound,
+    miu_diag_upper_bound,
+    miu_greedy,
+    miu_s_exact,
+)
+
+from conftest import random_psd
+
+
+def miu_det_ratio(K: np.ndarray, s: int) -> float:
+    """Literal det(K_S)/det(K_S') definition, for cross-checking."""
+    n = K.shape[0]
+    best = 0.0
+    for S in itertools.combinations(range(n), s):
+        dS = np.linalg.det(K[np.ix_(S, S)])
+        for Sp in itertools.combinations(S, s - 1):
+            dSp = np.linalg.det(K[np.ix_(Sp, Sp)]) if Sp else 1.0
+            if abs(dSp) > 1e-12:
+                best = max(best, dS / dSp)
+    return float(np.sqrt(max(best, 0.0)))
+
+
+@pytest.mark.parametrize("n,s", [(4, 2), (5, 3), (6, 4)])
+def test_exact_matches_det_ratio_definition(rng, n, s):
+    K = random_psd(rng, n)
+    assert abs(miu_s_exact(K, s) - miu_det_ratio(K, s)) < 1e-8
+
+
+def test_diagonal_K_gives_max_sqrt_diag(rng):
+    d = np.abs(rng.standard_normal(6)) + 0.1
+    K = np.diag(d)
+    expected = float(np.sqrt(d.max()))
+    for s in range(1, 7):
+        assert abs(miu_s_exact(K, s) - expected) < 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_miu_nonincreasing_in_s(n, seed):
+    """Conditioning on more points cannot raise the max conditional variance."""
+    rng = np.random.default_rng(seed)
+    K = random_psd(rng, n)
+    vals = [miu_s_exact(K, s) for s in range(1, n + 1)]
+    for a, b in zip(vals, vals[1:]):
+        assert b <= a + 1e-9
+
+
+def test_greedy_lower_bounds_exact(rng):
+    for _ in range(5):
+        K = random_psd(rng, 6)
+        for s in (2, 3, 4):
+            assert miu_greedy(K, s) <= miu_s_exact(K, s) + 1e-9
+
+
+def test_diag_upper_bound(rng):
+    """The corrected diagonal bound holds: MIU(T,K) <= (t-1) max sqrt(K_ii)."""
+    for trial in range(5):
+        K = random_psd(np.random.default_rng(trial), 6)
+        for t in range(2, 7):
+            assert miu_cumulative_exact(K, t) <= miu_diag_upper_bound(K, t) + 1e-9
+
+
+def test_paper_diag_bound_is_false_counterexample():
+    """Reproduction finding: the bound stated in Section 5.2 fails on a
+    diagonal K with one dominant variance (documented in miu.py)."""
+    K = np.diag([1.0, 1e-4, 1e-4])
+    claimed = miu_diag_paper_bound(K, 3)     # 1 + 0.01 + 0.01
+    actual = miu_cumulative_exact(K, 3)      # MIU_2 + MIU_3 = 1 + 1
+    assert actual > claimed                  # the stated bound is violated
+    assert actual <= miu_diag_upper_bound(K, 3) + 1e-12
+
+
+def test_linearly_dependent_increment_is_zero():
+    """Adding a variable that is a linear combination of S' adds no uncertainty."""
+    v = np.array([[1.0, 0.5], [0.5, 2.0]])
+    A = np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]])  # third = first + second
+    K = A @ v @ A.T
+    # with s = 3, the only choice is S = {0,1,2}; adding any element to the
+    # other two is linearly determined -> MIU_3 ~ 0
+    assert miu_s_exact(K, 3) < 1e-5

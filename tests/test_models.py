@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: reduced configs, forward + train + serve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    decode_step,
+    forward_logits_last,
+    forward_loss,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import TrainState, make_train_step
+
+
+def make_batch(cfg, B=2, S=64, seed=0, with_labels=True):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.frontend is None:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+        if with_labels:
+            batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    elif cfg.frontend == "patches":
+        ni = cfg.num_frontend_tokens
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, ni, cfg.frontend_dim)), jnp.float32)
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - ni)))
+        if with_labels:
+            batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - ni)))
+    else:  # frames
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.frontend_dim)), jnp.float32)
+        if with_labels:
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S, cfg.num_lm_heads)))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss = forward_loss(params, batch, cfg, None)
+    assert jnp.isfinite(loss), arch
+    assert 0.0 < float(loss) < 20.0
+
+    if cfg.frontend == "frames":
+        db = {"frames": jnp.ones((2, 1, cfg.frontend_dim), jnp.float32)}
+    else:
+        db = {"tokens": jnp.ones((2, 1), jnp.int32)}
+    cache = init_cache(cfg, batch=2, max_len=96)
+    logits, cache2 = decode_step(params, db, cache, cfg, None)
+    assert jnp.isfinite(logits).all(), arch
+    expected_v = cfg.vocab_size
+    assert logits.shape[-1] == expected_v
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-1.3b", "arctic-480b"])
+def test_smoke_train_step_improves_loss(arch):
+    cfg = get_smoke_config(arch)
+    opt_cfg = OptConfig(lr=5e-3, warmup_steps=1, total_steps=20, weight_decay=0.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params=params, opt=adamw_init(params, opt_cfg))
+    step = jax.jit(make_train_step(cfg, opt_cfg, None))
+    batch = make_batch(cfg, B=4, S=32)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)   # overfit one batch
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "h2o-danube-3-4b", "mamba2-1.3b",
+                                  "zamba2-2.7b", "olmo-1b", "musicgen-medium"])
+def test_prefill_decode_matches_full_forward(arch):
+    """decode(prefill(x[:S-1]), x[S-1]) logits == full forward logits at S."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 48
+    full = make_batch(cfg, B=B, S=S, with_labels=False)
+
+    if cfg.frontend == "frames":
+        prefix = {"frames": full["frames"][:, : S - 1]}
+        last = {"frames": full["frames"][:, S - 1 : S]}
+    else:
+        prefix = {k: (v[:, : S - 1] if k == "tokens" else v) for k, v in full.items()}
+        last = {"tokens": full["tokens"][:, -1:]}
+
+    want = forward_logits_last(params, full, cfg, None)
+    _, cache = prefill(params, prefix, cfg, None, max_len=S + 8)
+    got, _ = decode_step(params, last, cache, cfg, None)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """With SWA, decoding past the window must match a fresh prefill of the
+    last `window` tokens."""
+    cfg = get_smoke_config("h2o-danube-3-4b")   # window 64
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 1, 96                                # > window
+    full = make_batch(cfg, B=B, S=S, with_labels=False)
+    prefix = {"tokens": full["tokens"][:, : S - 1]}
+    last = {"tokens": full["tokens"][:, -1:]}
+    want = forward_logits_last(params, full, cfg, None)
+    _, cache = prefill(params, prefix, cfg, None, max_len=S + 8)
+    got, _ = decode_step(params, last, cache, cfg, None)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+def test_full_configs_match_published_shapes():
+    expect = {
+        "musicgen-medium": (48, 1536, 2048),
+        "zamba2-2.7b": (54, 2560, 32000),
+        "paligemma-3b": (18, 2048, 257216),
+        "mamba2-1.3b": (48, 2048, 50280),
+        "arctic-480b": (35, 7168, 32000),
+        "qwen3-moe-235b-a22b": (94, 4096, 151936),
+        "qwen3-4b": (36, 2560, 151936),
+        "qwen3-8b": (36, 4096, 151936),
+        "olmo-1b": (16, 2048, 50304),
+        "h2o-danube-3-4b": (24, 3840, 32000),
+    }
+    for arch, (L, d, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.vocab_size) == (L, d, V), arch
+
+
+def test_param_counts_in_published_ballpark():
+    """Total parameters should land near the names on the tin."""
+    expect_b = {"qwen3-8b": (7.0, 9.5), "arctic-480b": (420, 520),
+                "qwen3-moe-235b-a22b": (200, 260), "mamba2-1.3b": (1.0, 1.6),
+                "olmo-1b": (0.9, 1.5), "h2o-danube-3-4b": (3.3, 4.6)}
+    for arch, (lo, hi) in expect_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+    # MoE active params
+    act = get_config("qwen3-moe-235b-a22b").active_param_count() / 1e9
+    assert 15 <= act <= 30, act

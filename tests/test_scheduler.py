@@ -1,0 +1,88 @@
+"""Event-driven MM-GP-EI scheduler + baselines (Algorithm 1, Section 6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICIES,
+    FailureEvent,
+    azure_problem,
+    final_regret,
+    regret_curves,
+    simulate,
+    synthetic_matern_problem,
+)
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    return synthetic_matern_problem(num_users=6, num_models_per_user=12, seed=3)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_every_model_observed_exactly_once(small_problem, policy):
+    res = simulate(small_problem, policy, num_devices=3, seed=0)
+    observed = [t.model for t in res.trials if t.z is not None]
+    assert sorted(observed) == list(range(small_problem.num_models))
+
+
+def test_device_count_respected(small_problem):
+    res = simulate(small_problem, "mdmt", num_devices=2, seed=0)
+    # no more than 2 trials overlap at any time
+    events = []
+    for t in res.trials:
+        events += [(t.start, 1), (t.end, -1)]
+    events.sort()
+    load, peak = 0, 0
+    for _, d in events:
+        load += d
+        peak = max(peak, load)
+    assert peak <= 2
+
+
+def test_failure_requeues_model(small_problem):
+    fails = [FailureEvent(device=0, at=2.5, downtime=1.0)]
+    res = simulate(small_problem, "mdmt", num_devices=2, seed=0, failures=fails)
+    failed = [t for t in res.trials if t.z is None]
+    assert len(failed) == 1
+    # the failed model is eventually observed anyway
+    observed = {t.model for t in res.trials if t.z is not None}
+    assert failed[0].model in observed
+
+
+def test_more_devices_never_slower(small_problem):
+    times = []
+    for M in (1, 2, 4):
+        res = simulate(small_problem, "mdmt", num_devices=M, seed=0)
+        times.append(regret_curves(res).time_to_instantaneous(0.02))
+    assert times[0] >= times[1] >= times[2]
+
+
+def test_mdmt_beats_random_on_azure():
+    """Paper Fig. 2 qualitative claim, averaged over seeds."""
+    r_mdmt, r_rand = [], []
+    for seed in range(4):
+        prob = azure_problem(seed=seed)
+        r_mdmt.append(final_regret(simulate(prob, "mdmt", 1, seed=seed)))
+        r_rand.append(final_regret(simulate(prob, "random", 1, seed=seed)))
+    assert np.mean(r_mdmt) < np.mean(r_rand)
+
+
+def test_heterogeneous_devices_prefer_fast(small_problem):
+    res = simulate(small_problem, "mdmt", num_devices=2, seed=0,
+                   device_speeds=np.array([1.0, 4.0]))
+    per_dev = {0: 0, 1: 0}
+    for t in res.trials:
+        per_dev[t.device] += 1
+    assert per_dev[1] > per_dev[0]
+
+
+def test_warm_start_two_fastest():
+    prob = synthetic_matern_problem(num_users=3, num_models_per_user=8,
+                                    seed=1, cost="lognormal")
+    res = simulate(prob, "mdmt", num_devices=1, seed=0, warm_start=2)
+    first6 = [t.model for t in res.trials[:6]]
+    for u in range(3):
+        idx = np.nonzero(prob.membership[u])[0]
+        fastest2 = set(idx[np.argsort(prob.cost[idx])][:2])
+        assert fastest2 <= set(first6)

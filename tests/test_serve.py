@@ -1,0 +1,44 @@
+"""Serving engine: waves, stopping, utilization accounting."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeConfig, StaticBatchEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("qwen3-4b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return StaticBatchEngine(cfg, params, ServeConfig(batch_slots=2, max_len=128))
+
+
+def test_engine_serves_all_requests(engine):
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, 255, size=8 + i).astype(np.int32),
+                    max_new_tokens=4) for i in range(5)]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == 5
+    assert all(r.done and len(r.output) == 4 for r in done)
+    assert engine.stats["waves"] == 3           # 2 + 2 + 1 slots
+
+
+def test_engine_eos_stops_early():
+    cfg = get_smoke_config("qwen3-4b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = StaticBatchEngine(cfg, params, ServeConfig(batch_slots=1, max_len=128))
+    probe = Request(0, np.arange(8, dtype=np.int32), max_new_tokens=1)
+    eng.submit(probe)
+    eng.run()
+    first = probe.output[0]
+    # same prompt with that token as EOS stops after one step
+    r = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=16, eos_id=first)
+    eng.submit(r)
+    eng.run()
+    assert len(r.output) == 1 and r.output[0] == first
+    assert 0.0 < eng.slot_utilization <= 1.0

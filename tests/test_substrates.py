@@ -1,0 +1,154 @@
+"""Data pipeline, optimizer, checkpointing, cost model, fleet."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.core.cost_model import CostModel
+from repro.core.fleet import Fleet
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+
+
+# --- data -------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    cfg = get_smoke_config("olmo-1b")
+    d = DataConfig(seq_len=32, global_batch=4, seed=7)
+    s1, s2 = SyntheticLMStream(d, cfg), SyntheticLMStream(d, cfg)
+    for step in (0, 5, 1000):
+        b1, b2 = s1.batch_at(step), s2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch_at(0)["tokens"], s1.batch_at(1)["tokens"])
+
+
+def test_data_host_sharding_distinct():
+    cfg = get_smoke_config("olmo-1b")
+    b0 = SyntheticLMStream(DataConfig(32, 8, seed=7, num_hosts=2, host_id=0), cfg).batch_at(3)
+    b1 = SyntheticLMStream(DataConfig(32, 8, seed=7, num_hosts=2, host_id=1), cfg).batch_at(3)
+    assert b0["tokens"].shape == (4, 32)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_data_zipf_skew_increases_top_token_mass():
+    cfg = get_smoke_config("olmo-1b")
+    flat = SyntheticLMStream(DataConfig(256, 8, seed=1, zipf_a=1.01), cfg).batch_at(0)
+    skew = SyntheticLMStream(DataConfig(256, 8, seed=1, zipf_a=2.5), cfg).batch_at(0)
+    top_mass = lambda t: np.mean(np.asarray(t) < 10)
+    assert top_mass(skew["tokens"]) > top_mass(flat["tokens"])
+
+
+def test_frames_and_patches_batches():
+    for arch in ("musicgen-medium", "paligemma-3b"):
+        cfg = get_smoke_config(arch)
+        b = SyntheticLMStream(DataConfig(64, 2, seed=0), cfg).batch_at(0)
+        if cfg.frontend == "frames":
+            assert b["frames"].shape == (2, 64, cfg.frontend_dim)
+            assert b["labels"].shape == (2, 64, cfg.num_lm_heads)
+        else:
+            assert b["patches"].shape == (2, cfg.num_frontend_tokens, cfg.frontend_dim)
+
+
+# --- optimizer ---------------------------------------------------------------
+
+def adamw_numpy(p, g, mu, nu, step, cfg):
+    mu = cfg.b1 * mu + (1 - cfg.b1) * g
+    nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+    mh = mu / (1 - cfg.b1 ** step)
+    vh = nu / (1 - cfg.b2 ** step)
+    lr = float(lr_at(cfg, jnp.asarray(step)))
+    return p - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p), mu, nu
+
+
+def test_adamw_matches_reference():
+    cfg = OptConfig(lr=1e-2, clip_norm=1e9, warmup_steps=0, total_steps=10**9,
+                    min_lr_ratio=1.0)
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+    state = adamw_init(p, cfg)
+    p2, state2, _ = adamw_update(p, g, state, cfg)
+    ref, _, _ = adamw_numpy(np.asarray(p["w"]), np.asarray(g["w"]),
+                            np.zeros(5), np.zeros(5), 1, cfg)
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, atol=1e-5)
+
+
+def test_grad_clipping_caps_update():
+    cfg = OptConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, total_steps=10**9,
+                    min_lr_ratio=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    state = adamw_init(p, cfg)
+    _, _, metrics = adamw_update(p, g, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-3)
+
+
+# --- checkpointing -------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(3.5)}}
+    save_checkpoint(tmp_path, 7, tree, {"note": "x"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = load_checkpoint(tmp_path, 7, like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert meta["note"] == "x"
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"w": jnp.ones(3)}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree, blocking=False)
+    mgr.wait()
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+def test_checkpoint_restore_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = {"w": jnp.arange(4.0)}
+    mgr.save(3, tree)
+    mgr.save(9, jax.tree.map(lambda x: x * 2, tree))
+    step, restored, _ = mgr.restore_latest(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.arange(4.0) * 2)
+
+
+# --- cost model / fleet ---------------------------------------------------------
+
+def test_cost_model_analytic_scales_with_chips():
+    cm = CostModel()
+    cfg = get_smoke_config("qwen3-4b")
+    t256 = cm._analytic(cfg, "train_4k", 256)
+    t16 = cm._analytic(cfg, "train_4k", 16)
+    assert t16 > t256 > 0
+
+
+def test_cost_model_measured_blend():
+    cm = CostModel()
+    cfg = get_smoke_config("qwen3-4b")
+    before = cm.trial_seconds("qwen3-4b-smoke", "train_4k", steps=10, chips=16, cfg=cfg)
+    cm.observe("qwen3-4b-smoke", "train_4k", 16, measured_seconds=before * 10)
+    after = cm.trial_seconds("qwen3-4b-smoke", "train_4k", steps=10, chips=16, cfg=cfg)
+    assert after > before
+
+
+def test_fleet_failure_and_recovery():
+    fleet = Fleet.partition_pod(total_chips=256, num_slices=4)
+    assert fleet.num_devices == 4 and fleet.slices[0].chips == 64
+    fleet.slices[1].current_trial = 42
+    killed = fleet.fail(1)
+    assert killed == 42
+    assert len(fleet.free_at(0.0)) == 3
+    fleet.recover(1)
+    assert len(fleet.free_at(0.0)) == 4
