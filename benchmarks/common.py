@@ -1,17 +1,51 @@
-"""Shared benchmark utilities: timing + CSV row emission.
+"""Shared benchmark utilities: timing, CSV row emission, engine selection.
 
 Every benchmark prints rows:  name,us_per_call,derived
 (one logical row per paper-table entry; `derived` packs the table's
 figure-of-merit as `key=value` pairs joined by `;`).
+
+The episode-driven figures (fig2/fig3/fig4/fig5) accept ``--engine
+{event,batched}``: ``event`` is the host event loop in
+``repro.core.scheduler``; ``batched`` runs the whole sweep as one
+``vmap(lax.scan)`` call via ``repro.core.sim_batched`` (DESIGN.md §6).
+``--seeds`` overrides the per-figure seed count for either engine
+(many-seed batched sweeps are nearly free once the batch is compiled).
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import time
 
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def positive_int(value: str) -> int:
+    iv = int(value)
+    if iv < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {iv}")
+    return iv
+
+
+def parse_engine_args(argv=None) -> argparse.Namespace:
+    """Parse the shared --engine/--seeds flags.
+
+    Tolerates bare section names (benchmarks.run passes sys.argv through)
+    but rejects unknown *flags*, so a typo'd option fails loudly instead of
+    silently running the default engine — also when a figure script is run
+    directly (``python -m benchmarks.fig5_synthetic_speedup --engine ...``).
+    """
+    p = argparse.ArgumentParser(
+        description="episode-engine selection (shared by fig2-5)")
+    p.add_argument("--engine", choices=("event", "batched"), default="event")
+    p.add_argument("--seeds", type=positive_int, default=None)
+    args, rest = p.parse_known_args(argv)
+    stray = [t for t in rest if t.startswith("-")]
+    if stray:
+        p.error(f"unrecognized arguments: {' '.join(stray)}")
+    return args
 
 
 def emit(name: str, us_per_call: float, **derived) -> None:

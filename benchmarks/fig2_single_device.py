@@ -5,7 +5,12 @@ Figure of merit (paper Section 6.2): time to reach a given instantaneous
 regret.  The paper reports MDMT reaching the same regret "up to 5x" faster
 than round robin on Azure and no significant speedup on DeepLearning; we
 report the geometric-mean and max per-seed speedups at two thresholds, plus
-cumulative regret."""
+cumulative regret.
+
+``--engine batched`` runs each seed's three policies as one
+``repro.core.sim_batched`` call (identical trial sequences for the
+deterministic policies; the random baseline differs per-seed only in its
+PRNG stream — see DESIGN.md §6)."""
 
 from __future__ import annotations
 
@@ -13,14 +18,16 @@ import numpy as np
 
 from repro.core import (
     POLICIES,
+    EpisodeSpec,
     azure_problem,
     deeplearning_problem,
     final_regret,
     regret_curves,
     simulate,
+    simulate_batch,
 )
 
-from .common import FAST, emit
+from .common import FAST, emit, parse_engine_args
 
 THRESHOLDS = {"azure": (0.03, 0.015), "deeplearning": (0.02, 0.01)}
 
@@ -31,8 +38,9 @@ def _gmean(xs):
     return float(np.exp(np.mean(np.log(xs)))) if xs.size else float("nan")
 
 
-def run(num_devices: int = 1, tag: str = "fig2") -> None:
-    seeds = range(3 if FAST else 8)
+def run(num_devices: int = 1, tag: str = "fig2", engine: str = "event",
+        num_seeds: int | None = None) -> None:
+    seeds = range(num_seeds if num_seeds is not None else (3 if FAST else 8))
     for ds_name, maker in (("azure", azure_problem),
                            ("deeplearning", deeplearning_problem)):
         ths = THRESHOLDS[ds_name]
@@ -41,18 +49,43 @@ def run(num_devices: int = 1, tag: str = "fig2") -> None:
         dec_us = {p: [] for p in POLICIES}
         for seed in seeds:
             prob = maker(seed=seed)
+            if engine == "batched":
+                # One call per (problem, seed): unlike fig5, the ease.ml
+                # generators resample the *prior* (K, mu0, cost) per seed,
+                # so seeds cannot share a batch via the z_true override.
+                # The jit cache is still shared across seeds (same shapes).
+                batch = simulate_batch(
+                    prob, [EpisodeSpec(pol, num_devices, seed)
+                           for pol in POLICIES])
+                per_policy = {
+                    pol: batch.episode_result(i)
+                    for i, pol in enumerate(POLICIES)}
+                # whole-episode wall clock (incl. one-time jit compile) — NOT
+                # comparable to event mode's pure per-decision latency, hence
+                # the engine=batched tag on the emitted rows
+                batch_us = batch.wall_seconds / len(POLICIES) * 1e6
             for pol in POLICIES:
-                res = simulate(prob, pol, num_devices=num_devices, seed=seed)
+                if engine == "batched":
+                    res = per_policy[pol]
+                else:
+                    res = simulate(prob, pol, num_devices=num_devices, seed=seed)
                 c = regret_curves(res)
                 for th in ths:
                     t_hit[pol][th].append(c.time_to_instantaneous(th))
                 regret[pol].append(final_regret(res))
                 dec_us[pol].append(
+                    batch_us if engine == "batched" else
                     res.decision_seconds / max(res.decisions, 1) * 1e6)
         for pol in POLICIES:
             derived = {"cum_regret": f"{np.mean(regret[pol]):.0f}"}
+            if engine == "batched":
+                derived["engine"] = "batched"  # us = wall/episode, not per-decision
             for th in ths:
                 derived[f"t_reach_{th}"] = f"{np.mean(t_hit[pol][th]):.0f}"
+            # batched: min over seeds = steady-state episode cost (the first
+            # seed's call carries the one-time jit compile)
+            us = (float(np.min(dec_us[pol])) if engine == "batched"
+                  else float(np.mean(dec_us[pol])))
             if pol == "mdmt":
                 for other in ("round_robin", "random"):
                     ratios = [
@@ -65,11 +98,12 @@ def run(num_devices: int = 1, tag: str = "fig2") -> None:
                         f"{finite.max():.2f}" if finite.size else "nan")
                 derived["regret_vs_rr"] = (
                     f"{np.mean(regret['round_robin']) / np.mean(regret['mdmt']):.2f}")
-            emit(f"{tag}_{ds_name}_{pol}", np.mean(dec_us[pol]), **derived)
+            emit(f"{tag}_{ds_name}_{pol}", us, **derived)
 
 
 def main() -> None:
-    run(num_devices=1, tag="fig2")
+    args = parse_engine_args()
+    run(num_devices=1, tag="fig2", engine=args.engine, num_seeds=args.seeds)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,17 @@
-"""Paper Fig. 4: policy comparison with four computation devices."""
+"""Paper Fig. 4: policy comparison with four computation devices.
+
+Accepts the same ``--engine {event,batched}`` flag as fig2."""
 
 from __future__ import annotations
 
 from . import fig2_single_device
+from .common import parse_engine_args
 
 
 def main() -> None:
-    fig2_single_device.run(num_devices=4, tag="fig4")
+    args = parse_engine_args()
+    fig2_single_device.run(num_devices=4, tag="fig4",
+                           engine=args.engine, num_seeds=args.seeds)
 
 
 if __name__ == "__main__":

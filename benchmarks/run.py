@@ -1,24 +1,63 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Set BENCH_FAST=1 for a quick
-pass (fewer seeds/device counts).
+Prints ``name,us_per_call,derived`` CSV rows (``derived`` packs each table's
+figure-of-merit as ``key=value`` pairs joined by ``;``).
 
-  PYTHONPATH=src python -m benchmarks.run [section ...]
+  PYTHONPATH=src python -m benchmarks.run [section ...] [--engine ENGINE]
 
-Sections: fig2 fig3 fig4 fig5 control roofline (default: all).
+Sections (default: all):
+  fig2      single-device policy comparison, Azure + DeepLearning
+  fig3      device-count sweep for MM-GP-EI
+  fig4      policy comparison on four devices
+  fig5      synthetic Matérn near-linear-speedup sweep
+  control   control-plane microbenchmarks (GP/EI hot path)
+  roofline  data-plane cost-model rooflines
+
+Flags (forwarded to the figure scripts):
+  --engine {event,batched}   episode engine for fig2-5.  ``event`` is the
+                             host event loop (one episode at a time);
+                             ``batched`` runs whole sweeps as a single
+                             vmap(lax.scan) call via repro.core.sim_batched.
+  --seeds S                  widen batched sweeps (fig5 many-seed mode).
+
+Set BENCH_FAST=1 for a quick pass (fewer seeds/device counts).
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
+from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "roofline")
 
 
+def _parse_args():
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("sections", nargs="*", metavar="section",
+                   help=f"benchmark sections to run: {', '.join(SECTIONS)} "
+                        "(default: all)")
+    p.add_argument("--engine", choices=("event", "batched"), default="event",
+                   help="episode engine for fig2-5 (default: event)")
+    p.add_argument("--seeds", type=positive_int, default=None,
+                   help="seeds per configuration for fig2-5")
+    # strict parse: run.py declares every flag the figure scripts accept, so
+    # a typo'd flag fails loudly here instead of silently running defaults
+    args = p.parse_args()
+    bad = [s for s in args.sections if s not in SECTIONS]
+    if bad:
+        p.error(f"unknown section(s) {bad}; choose from {', '.join(SECTIONS)}")
+    return args
+
+
 def main() -> None:
-    want = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SECTIONS)
+    args = _parse_args()
+    want = list(args.sections) or list(SECTIONS)
     print("name,us_per_call,derived")
     failures = []
     for section in want:

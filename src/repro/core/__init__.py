@@ -1,14 +1,23 @@
 """The paper's contribution: multi-device, multi-tenant GP-EI scheduling.
 
-Control-plane stack:
-  gp.py         zero-noise GP posterior (masked one-shot + incremental)
-  ei.py         tau / EI / multi-tenant EI / EIrate (eqs. 3-6, Lemma 1)
-  miu.py        Maximum Incremental Uncertainty (Section 5.1)
-  tenancy.py    TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
-  scheduler.py  event-driven MM-GP-EI + round-robin/random baselines
-  regret.py     cumulative + instantaneous global-happiness regret
-  cost_model.py roofline-derived c(x) (bridges to the data plane)
-  service.py    real-executor multi-tenant service loop
+Control-plane stack (see DESIGN.md for the full design rationale):
+  gp.py          zero-noise GP posterior (masked one-shot + incremental +
+                 block-diagonal engines; jitter choice in DESIGN.md §3.3)
+  ei.py          tau / EI / multi-tenant EI / EIrate (eqs. 3-6, Lemma 1)
+  miu.py         Maximum Incremental Uncertainty (Section 5.1)
+  tenancy.py     TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
+  scheduler.py   event-driven MM-GP-EI + round-robin/random baselines
+                 (one episode, host event loop; failures + horizons supported)
+  sim_batched.py batched synchronous-slot engine: many episodes as one
+                 vmap(lax.scan) accelerator call (DESIGN.md §6) — use for
+                 large (policy x tenants x devices x seed) sweeps
+  regret.py      cumulative + instantaneous global-happiness regret
+  cost_model.py  roofline-derived c(x) (bridges to the data plane)
+  service.py     real-executor multi-tenant service loop
+
+Two episode engines, one contract: for deterministic policies and identical
+seeds, ``sim_batched.simulate_batch`` reproduces ``scheduler.simulate``'s
+trial sequence exactly (tested in tests/test_sim_batched.py).
 """
 
 from .ei import (  # noqa: F401
@@ -29,10 +38,12 @@ from .miu import (  # noqa: F401
 )
 from .regret import RegretCurves, final_regret, regret_curves, speedup_to_threshold  # noqa: F401
 from .scheduler import POLICIES, FailureEvent, SimResult, TrialRecord, simulate  # noqa: F401
+from .sim_batched import BatchResult, EpisodeSpec, simulate_batch  # noqa: F401
 from .tenancy import (  # noqa: F401
     Problem,
     azure_problem,
     deeplearning_problem,
     matern52,
     synthetic_matern_problem,
+    synthetic_matern_z,
 )

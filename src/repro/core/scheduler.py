@@ -82,6 +82,36 @@ def _fastest_models(problem: Problem, user: int, count: int) -> list[int]:
     return list(order[:count])
 
 
+def no_obs_floor(problem: Problem) -> float:
+    """Finite stand-in for "no observation yet": far below any plausible z,
+    so unserved tenants dominate the EI sum (see DESIGN.md §7).  Shared by
+    both episode engines — the equivalence contract depends on it."""
+    prior_sd = float(np.sqrt(np.clip(np.diag(problem.K), 0, None).max()))
+    return float(problem.mu0.min()) - 5.0 * max(prior_sd, 1e-3)
+
+
+def warm_start_queue(problem: Problem, warm_start: int) -> list[int]:
+    """The initial launch queue: user-major, ``warm_start`` fastest models
+    each, deduplicated keeping first occurrence (Section 6.1 protocol).
+    ``warm_start=0`` yields Algorithm 1 line 1-2's prior-mean argmax per
+    tenant instead.  Shared by both episode engines."""
+    pending: list[int] = []
+    seen: set[int] = set()
+    for u in range(problem.num_users):
+        for m in _fastest_models(problem, u, warm_start):
+            if m not in seen:
+                seen.add(m)
+                pending.append(m)
+    if warm_start == 0:
+        for u in range(problem.num_users):
+            idx = np.nonzero(problem.membership[u])[0]
+            m = int(idx[np.argmax(problem.mu0[idx])])
+            if m not in seen:
+                seen.add(m)
+                pending.append(m)
+    return pending
+
+
 class _PolicyState:
     """Shared mutable state the policies read."""
 
@@ -93,10 +123,7 @@ class _PolicyState:
         self.selected = np.zeros(n, dtype=bool)   # observed OR in flight
         self.observed = np.zeros(n, dtype=bool)
         self.best = np.full(N, -np.inf)           # z(x_i^*(t)), observed best
-        # Finite stand-in for "no observation yet": far below any plausible z,
-        # so unserved tenants dominate the EI sum (see DESIGN.md §7).
-        prior_sd = float(np.sqrt(np.clip(np.diag(problem.K), 0, None).max()))
-        self._no_obs_floor = float(problem.mu0.min()) - 5.0 * max(prior_sd, 1e-3)
+        self._no_obs_floor = no_obs_floor(problem)
         self._membership_j = jnp.asarray(problem.membership)
         self._cost_j = jnp.asarray(problem.cost.astype(np.float32))
         # device-resident mirrors updated incrementally (one .at[] per event
@@ -211,24 +238,7 @@ def simulate(
     for evs in fail_sched.values():
         evs.sort(key=lambda f: f.at)
 
-    # Warm-start queue: user-major, two fastest models each (dedup keeps the
-    # first occurrence when tenants share models).
-    pending: list[int] = []
-    seen: set[int] = set()
-    for u in range(problem.num_users):
-        for m in _fastest_models(problem, u, warm_start):
-            if m not in seen:
-                seen.add(m)
-                pending.append(m)
-
-    if warm_start == 0:
-        # Algorithm 1 line 1-2: start from the prior-mean argmax of each tenant.
-        for u in range(problem.num_users):
-            idx = np.nonzero(problem.membership[u])[0]
-            m = int(idx[np.argmax(problem.mu0[idx])])
-            if m not in seen:
-                seen.add(m)
-                pending.append(m)
+    pending = warm_start_queue(problem, warm_start)
 
     heap: list[tuple[float, int, str, tuple]] = []  # (time, seq, kind, payload)
     seq = 0

@@ -89,6 +89,46 @@ def matern52(X: np.ndarray, Y: np.ndarray, length_scale: float = 0.2,
     return variance * (1.0 + s5 + 5.0 * r * r / 3.0) * np.exp(-s5)
 
 
+def _matern_block_chol(
+    m: int, length_scale: float, kernel_variance: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """(K_block, cholesky(K_block)) for one tenant's m-point Matérn prior."""
+    xs = np.linspace(0.0, 1.0, m)[:, None]
+    K_block = matern52(xs, xs, length_scale, kernel_variance)
+    K_block += 1e-10 * np.eye(m)
+    return K_block, np.linalg.cholesky(K_block)
+
+
+def _matern_draw(rng: np.random.Generator, L: np.ndarray) -> np.ndarray:
+    """One tenant's GP sample, "shifted upwards to be non-negative"."""
+    sample = L @ rng.standard_normal(L.shape[0])
+    return sample - sample.min()
+
+
+def synthetic_matern_z(
+    num_users: int = 50,
+    num_models_per_user: int = 50,
+    seed: int = 0,
+    length_scale: float = 0.2,
+    kernel_variance: float = 0.04,
+) -> np.ndarray:
+    """Just the (n,) ground-truth draw of :func:`synthetic_matern_problem`.
+
+    Bit-identical to the z_true that ``synthetic_matern_problem`` produces
+    for the same arguments (both go through ``_matern_draw`` with the same
+    RNG stream), but skips the O(n^2) prior assembly — many-seed batched
+    sweeps only need fresh samples over a shared prior
+    (``EpisodeSpec(z_true=...)``).
+    """
+    rng = np.random.default_rng(seed)
+    m = num_models_per_user
+    _, L = _matern_block_chol(m, length_scale, kernel_variance)
+    z = np.zeros(num_users * m)
+    for i in range(num_users):
+        z[i * m:(i + 1) * m] = _matern_draw(rng, L)
+    return z
+
+
 def synthetic_matern_problem(
     num_users: int = 50,
     num_models_per_user: int = 50,
@@ -101,10 +141,7 @@ def synthetic_matern_problem(
     shifted upward to be non-negative, unit costs."""
     rng = np.random.default_rng(seed)
     m = num_models_per_user
-    xs = np.linspace(0.0, 1.0, m)[:, None]
-    K_block = matern52(xs, xs, length_scale, kernel_variance)
-    K_block += 1e-10 * np.eye(m)
-    L = np.linalg.cholesky(K_block)
+    K_block, L = _matern_block_chol(m, length_scale, kernel_variance)
 
     n = num_users * m
     K = np.zeros((n, n))
@@ -113,9 +150,7 @@ def synthetic_matern_problem(
     for i in range(num_users):
         sl = slice(i * m, (i + 1) * m)
         K[sl, sl] = K_block
-        sample = L @ rng.standard_normal(m)
-        sample = sample - sample.min()  # "shifted upwards to be non-negative"
-        z[sl] = sample
+        z[sl] = _matern_draw(rng, L)
         membership[i, sl] = True
 
     if isinstance(cost, str):
