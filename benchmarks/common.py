@@ -15,11 +15,47 @@ The episode-driven figures (fig2/fig3/fig4/fig5) accept ``--engine
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
+from pathlib import Path
 
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+# rows of the suite currently being recorded (None = recording disabled);
+# benchmarks/run.py brackets each section with begin_suite()/end_suite() so
+# the perf trajectory lands in machine-readable BENCH_<suite>.json files
+# alongside the human-readable CSV on stdout.
+_suite_name: str | None = None
+_suite_rows: dict[str, dict] | None = None
+
+
+def begin_suite(name: str) -> None:
+    """Start recording emit() rows under suite ``name``."""
+    global _suite_name, _suite_rows
+    _suite_name = name
+    _suite_rows = {}
+
+
+def end_suite(out_dir: str | Path = ".") -> Path | None:
+    """Write the recorded rows to BENCH_<suite>.json and stop recording.
+    Returns the path (None if nothing was recorded)."""
+    global _suite_name, _suite_rows
+    name, rows = _suite_name, _suite_rows
+    _suite_name = _suite_rows = None
+    if name is None or rows is None:
+        return None
+    path = Path(out_dir) / f"BENCH_{name}.json"
+    path.write_text(json.dumps(rows, indent=2, sort_keys=True))
+    return path
+
+
+def abort_suite() -> None:
+    """Stop recording WITHOUT writing — a failed section must not clobber
+    the committed baseline with partial rows."""
+    global _suite_name, _suite_rows
+    _suite_name = _suite_rows = None
 
 
 def positive_int(value: str) -> int:
@@ -51,6 +87,9 @@ def parse_engine_args(argv=None) -> argparse.Namespace:
 def emit(name: str, us_per_call: float, **derived) -> None:
     packed = ";".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{packed}")
+    if _suite_rows is not None:
+        _suite_rows[name] = {"us_per_call": round(us_per_call, 1),
+                             **{k: str(v) for k, v in derived.items()}}
 
 
 def time_us(fn, *args, iters: int = 20, warmup: int = 3, **kw) -> float:

@@ -11,7 +11,13 @@ Sections (default: all):
   fig4      policy comparison on four devices
   fig5      synthetic Matérn near-linear-speedup sweep
   control   control-plane microbenchmarks (GP/EI hot path)
+  stream    streaming control plane under tenant churn (stream_churn)
   roofline  data-plane cost-model rooflines
+
+Each section also records its rows to a machine-readable
+``BENCH_<suite>.json`` (e.g. BENCH_control_plane.json,
+BENCH_stream_churn.json) in the working directory — the committed perf
+trajectory baseline.
 
 Flags (forwarded to the figure scripts):
   --engine {event,batched}   episode engine for fig2-5.  ``event`` is the
@@ -29,9 +35,17 @@ import argparse
 import sys
 import traceback
 
+from . import common
 from .common import positive_int
 
-SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "roofline")
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "roofline")
+
+# section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
+SUITE_NAMES = {
+    "fig2": "fig2", "fig3": "fig3", "fig4": "fig4", "fig5": "fig5",
+    "control": "control_plane", "stream": "stream_churn",
+    "roofline": "roofline",
+}
 
 
 def _parse_args():
@@ -72,12 +86,19 @@ def main() -> None:
                 from . import fig5_synthetic_speedup as m
             elif section == "control":
                 from . import control_plane as m
+            elif section == "stream":
+                from . import stream_churn as m
             elif section == "roofline":
                 from . import roofline as m
             else:
                 raise KeyError(section)
+            common.begin_suite(SUITE_NAMES[section])
             m.main()
+            path = common.end_suite()
+            if path is not None:
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception:
+            common.abort_suite()   # partial rows must not clobber baselines
             failures.append(section)
             traceback.print_exc()
     if failures:

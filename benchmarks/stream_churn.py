@@ -1,0 +1,88 @@
+"""Streaming control-plane benchmark: GP-EI under tenant churn (DESIGN.md §9).
+
+Two measurements:
+
+* ``stream_churn_end_to_end`` — the acceptance scenario: 200 tenant sessions
+  (N >> M) arriving over time onto M = 8 slices with admission control;
+  figure of merit is wall-clock events/sec and µs per scheduler decision,
+  plus the service metrics (utilization, queue depth, p99 time-to-first-
+  observation) from the telemetry sink.
+
+* ``stream_decision_10k`` — decision latency at service scale: a dynamic
+  ControlPlane holding |L| ~ 10k live models across 200 tenants; one EIrate
+  decision (GP readout + batched scoring + argmax) on the hot loop, for both
+  scorer paths (the fused XLA dispatch and the ``kernels/ops.eirate``
+  entry point — Pallas on TPU, its XLA reference here).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ControlPlane
+from repro.core.fleet import Fleet
+from repro.core.tenancy import _matern_block_chol
+from repro.stream import StreamEngine, poisson_churn_trace
+
+from .common import FAST, emit, time_us
+
+
+def bench_end_to_end() -> None:
+    import time
+    sessions = 50 if FAST else 200
+    trace = poisson_churn_trace(
+        num_sessions=sessions, arrival_rate=1.0, seed=0,
+        m_min=2, m_max=16, session_scale=25.0, num_failure_slices=2)
+    eng = StreamEngine(Fleet.partition_pod(256, 8), "mdmt", seed=0,
+                       max_live_models=120)
+    t0 = time.perf_counter()
+    res = eng.run(trace)
+    wall = time.perf_counter() - t0
+    s = res.telemetry.summary()
+    events = trace.num_events + s["trials"]
+    emit(
+        "stream_churn_end_to_end",
+        wall / max(events, 1) * 1e6,
+        sessions=sessions,
+        slices=8,
+        trials=s["trials"],
+        decisions=res.decisions,
+        us_per_decision=f"{1e6 * res.decision_seconds / max(res.decisions, 1):.0f}",
+        admitted=s["sessions_admitted"],
+        queue_depth_max=s["queue_depth_max"],
+        utilization=f"{s['device_utilization']:.4f}",
+        ttfo_p99=f"{s['ttfo_p99']:.1f}" if s["ttfo_p99"] is not None else "na",
+        wall_s=f"{wall:.2f}",
+    )
+
+
+def bench_decision_at_scale() -> None:
+    """One EIrate decision at |L| ~ 10k live models (the service-scale bar)."""
+    tenants = 40 if FAST else 200
+    m = 50
+    K_block, L = _matern_block_chol(m, 0.2, 0.04)
+    rng = np.random.default_rng(0)
+    for scorer in ("fused", "ops"):
+        cp = ControlPlane(np.random.default_rng(0), scorer=scorer,
+                          model_capacity=tenants * m, tenant_capacity=tenants)
+        for _ in range(tenants):
+            cp.add_tenant(K_block, np.zeros(m), np.ones(m))
+        # a realistic posterior: a few observations per tenant
+        for t in range(tenants):
+            for li in rng.choice(m, size=3, replace=False):
+                g = t * m + int(li)
+                cp.record_start(g)
+                cp.record_observation(g, float(rng.uniform(0.0, 1.0)))
+        n_live = tenants * m
+        us = time_us(cp.choose_mdmt, iters=10 if FAST else 30)
+        emit(f"stream_decision_{scorer}_L{n_live}", us,
+             tenants=tenants, live_models=n_live)
+
+
+def main() -> None:
+    bench_end_to_end()
+    bench_decision_at_scale()
+
+
+if __name__ == "__main__":
+    main()

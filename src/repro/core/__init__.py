@@ -1,25 +1,37 @@
 """The paper's contribution: multi-device, multi-tenant GP-EI scheduling.
 
 Control-plane stack (see DESIGN.md for the full design rationale):
-  gp.py          zero-noise GP posterior (masked one-shot + incremental +
-                 block-diagonal engines; jitter choice in DESIGN.md §3.3)
-  ei.py          tau / EI / multi-tenant EI / EIrate (eqs. 3-6, Lemma 1)
-  miu.py         Maximum Incremental Uncertainty (Section 5.1)
-  tenancy.py     TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
-  scheduler.py   event-driven MM-GP-EI + round-robin/random baselines
-                 (one episode, host event loop; failures + horizons supported)
-  sim_batched.py batched synchronous-slot engine: many episodes as one
-                 vmap(lax.scan) accelerator call (DESIGN.md §6) — use for
-                 large (policy x tenants x devices x seed) sweeps
-  regret.py      cumulative + instantaneous global-happiness regret
-  cost_model.py  roofline-derived c(x) (bridges to the data plane)
-  service.py     real-executor multi-tenant service loop
+  gp.py            zero-noise GP posterior (masked one-shot + incremental +
+                   block-diagonal engines with runtime block add/retire;
+                   jitter choice in DESIGN.md §3.3)
+  ei.py            tau / EI / multi-tenant EI / EIrate (eqs. 3-6, Lemma 1)
+  miu.py           Maximum Incremental Uncertainty (Section 5.1)
+  tenancy.py       TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
+  control_plane.py the per-event decision core (GP fold + EIrate pick),
+                   shared by every engine; closed-world (from_problem) and
+                   open-world (tenant churn) construction — DESIGN.md §9
+  scheduler.py     event-driven MM-GP-EI + round-robin/random baselines
+                   (one episode, host event loop; failures + horizons supported)
+  sim_batched.py   batched synchronous-slot engine: many episodes as one
+                   vmap(lax.scan) accelerator call (DESIGN.md §6) — use for
+                   large (policy x tenants x devices x seed) sweeps
+  regret.py        cumulative + instantaneous global-happiness regret
+  cost_model.py    roofline-derived c(x) (bridges to the data plane)
+  service.py       real-executor multi-tenant service loop
 
-Two episode engines, one contract: for deterministic policies and identical
-seeds, ``sim_batched.simulate_batch`` reproduces ``scheduler.simulate``'s
-trial sequence exactly (tested in tests/test_sim_batched.py).
+Three episode engines, one contract: for deterministic policies and
+identical seeds, ``sim_batched.simulate_batch`` and (with churn disabled)
+``repro.stream.StreamEngine`` both reproduce ``scheduler.simulate``'s trial
+sequence exactly (tests/test_sim_batched.py, tests/test_stream.py).
 """
 
+from .control_plane import (  # noqa: F401
+    ControlPlane,
+    TenantHandle,
+    no_obs_floor,
+    tenant_warm_models,
+    warm_start_queue,
+)
 from .ei import (  # noqa: F401
     choose_next,
     ei_matrix,

@@ -1,0 +1,391 @@
+"""The per-event decision core shared by every episode engine (Algorithm 1).
+
+``ControlPlane`` owns exactly the state Algorithm 1's loop body needs — the
+GP posterior, the selected/observed masks, the per-tenant incumbents — and
+exposes it as a stepping API:
+
+  * ``record_start(x)`` / ``record_failure(x)`` / ``record_observation(x, z)``
+    fold one scheduler event into the state;
+  * ``choose_mdmt`` / ``choose_round_robin`` / ``choose_random`` score the
+    unselected pool and return the next launch (the EIrate argmax of eq. 6
+    for the paper's policy).
+
+Two construction modes, one implementation:
+
+  * :meth:`ControlPlane.from_problem` — the closed-world mode used by the
+    offline simulators (``scheduler.simulate``): every tenant is known up
+    front, shapes are exact, behavior is bit-identical to the pre-refactor
+    ``_PolicyState``.
+  * ``ControlPlane(...)`` with no problem — the open-world mode used by the
+    streaming engine (``repro.stream.engine``): tenants arrive and depart at
+    runtime via :meth:`add_tenant` / :meth:`retire_tenant`.  Buffers are
+    capacity-allocated (doubling growth) so the jitted scoring path keeps a
+    stable shape across churn events; a tenant's GP block is appended or
+    retired without refactorizing the others (``gp.BlockIncrementalGP``).
+
+Scoring is always the batched multi-tenant EIrate pass over the whole pool:
+``scorer="fused"`` (default) is the single-dispatch XLA path
+(``ei.choose_next_fused``); ``scorer="ops"`` routes through the
+``repro.kernels.ops.eirate`` entry point — the Pallas kernel on TPU, its XLA
+reference elsewhere — so the streaming hot loop exercises the same code the
+kernel benchmarks measure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ei import choose_next_fused, single_tenant_ei_scores
+from .gp import DEFAULT_JITTER, BlockIncrementalGP, make_gp
+from .tenancy import Problem
+
+SCORERS = ("fused", "ops")
+
+_FLOOR_SDS = 5.0  # "no observation yet" sits this many prior sds below mu0
+
+
+def _fastest_models(problem: Problem, user: int, count: int) -> list[int]:
+    idx = np.nonzero(problem.membership[user])[0]
+    order = idx[np.argsort(problem.cost[idx], kind="stable")]
+    return list(order[:count])
+
+
+def no_obs_floor(problem: Problem) -> float:
+    """Finite stand-in for "no observation yet": far below any plausible z,
+    so unserved tenants dominate the EI sum (see DESIGN.md §7).  Shared by
+    all episode engines — the equivalence contract depends on it."""
+    prior_sd = float(np.sqrt(np.clip(np.diag(problem.K), 0, None).max()))
+    return float(problem.mu0.min()) - _FLOOR_SDS * max(prior_sd, 1e-3)
+
+
+def warm_start_queue(problem: Problem, warm_start: int) -> list[int]:
+    """The initial launch queue: user-major, ``warm_start`` fastest models
+    each, deduplicated keeping first occurrence (Section 6.1 protocol).
+    ``warm_start=0`` yields Algorithm 1 line 1-2's prior-mean argmax per
+    tenant instead.  Shared by all episode engines."""
+    pending: list[int] = []
+    seen: set[int] = set()
+    for u in range(problem.num_users):
+        for m in _fastest_models(problem, u, warm_start):
+            if m not in seen:
+                seen.add(m)
+                pending.append(m)
+    if warm_start == 0:
+        for u in range(problem.num_users):
+            idx = np.nonzero(problem.membership[u])[0]
+            m = int(idx[np.argmax(problem.mu0[idx])])
+            if m not in seen:
+                seen.add(m)
+                pending.append(m)
+    return pending
+
+
+def tenant_warm_models(cost_block: np.ndarray, mu0_block: np.ndarray,
+                       warm_start: int) -> list[int]:
+    """Per-tenant warm-start picks (local indices): the ``warm_start``
+    cheapest models, or the prior-mean argmax when ``warm_start == 0``.
+    Concatenating these tenant-major over disjoint candidate sets reproduces
+    :func:`warm_start_queue` exactly — the churn-free equivalence relies on
+    it."""
+    if warm_start > 0:
+        order = np.argsort(np.asarray(cost_block), kind="stable")
+        return [int(i) for i in order[:warm_start]]
+    return [int(np.argmax(np.asarray(mu0_block)))]
+
+
+@dataclass(frozen=True)
+class TenantHandle:
+    """What :meth:`ControlPlane.add_tenant` returns: the tenant's slot and
+    the global model ids its block occupies."""
+    tenant_id: int
+    models: np.ndarray  # (m,) global model indices
+
+
+class ControlPlane:
+    """GP update + EIrate pick, as a reusable stepping API (module docstring)."""
+
+    def __init__(
+        self,
+        rng: np.random.Generator | None = None,
+        *,
+        jitter: float = DEFAULT_JITTER,
+        scorer: str = "fused",
+        model_capacity: int = 64,
+        tenant_capacity: int = 8,
+    ):
+        if scorer not in SCORERS:
+            raise ValueError(f"scorer must be one of {SCORERS}, got {scorer!r}")
+        self.rng = rng or np.random.default_rng(0)
+        self.scorer = scorer
+        self._jitter = jitter
+        self._dynamic = True
+        self._num_models = 0        # high-water mark of allocated model ids
+        self._num_tenants = 0       # high-water mark of tenant slots
+        cap_n = max(1, model_capacity)
+        cap_N = max(1, tenant_capacity)
+        # padding entries are born selected so every chooser masks them
+        self.selected = np.ones(cap_n, dtype=bool)
+        self.observed = np.zeros(cap_n, dtype=bool)
+        self.cost = np.ones(cap_n, dtype=np.float64)
+        self.membership = np.zeros((cap_N, cap_n), dtype=bool)
+        self.best = np.full(cap_N, -np.inf)
+        self.tenant_live = np.zeros(cap_N, dtype=bool)
+        self.model_live = np.zeros(cap_n, dtype=bool)
+        self._tenant_floor_stats: dict[int, tuple[float, float]] = {}
+        self._block_ids: dict[int, int] = {}
+        self._no_obs_floor = 0.0
+        self.gp = BlockIncrementalGP.empty(jitter)
+        self.gp.ensure_capacity(cap_n)
+        self.rr_pointer = 0
+        self._rebuild_mirrors()
+
+    @classmethod
+    def from_problem(
+        cls,
+        problem: Problem,
+        rng: np.random.Generator | None = None,
+        *,
+        jitter: float = DEFAULT_JITTER,
+        scorer: str = "fused",
+    ) -> "ControlPlane":
+        """Closed-world construction: all tenants at t=0, exact shapes.
+
+        Supports arbitrary (also overlapping) candidate sets — the GP engine
+        falls back to the dense incremental factorization when the prior is
+        not block-diagonal (``gp.make_gp``).  Churn methods are disabled."""
+        n, N = problem.num_models, problem.num_users
+        cp = cls.__new__(cls)
+        cp.rng = rng or np.random.default_rng(0)
+        if scorer not in SCORERS:
+            raise ValueError(f"scorer must be one of {SCORERS}, got {scorer!r}")
+        cp.scorer = scorer
+        cp._jitter = jitter
+        cp._dynamic = False
+        cp._num_models = n
+        cp._num_tenants = N
+        cp.selected = np.zeros(n, dtype=bool)
+        cp.observed = np.zeros(n, dtype=bool)
+        cp.cost = np.asarray(problem.cost, dtype=np.float64).copy()
+        cp.membership = np.asarray(problem.membership, dtype=bool).copy()
+        cp.best = np.full(N, -np.inf)
+        cp.tenant_live = np.ones(N, dtype=bool)
+        cp.model_live = np.ones(n, dtype=bool)
+        cp._tenant_floor_stats = {}
+        cp._block_ids = {}
+        cp._no_obs_floor = no_obs_floor(problem)
+        cp.gp = make_gp(problem.K, problem.mu0, problem.membership, jitter)
+        cp.rr_pointer = 0
+        cp._rebuild_mirrors()
+        return cp
+
+    # ---- capacity + device-resident mirrors -------------------------------
+
+    @property
+    def num_models(self) -> int:
+        return self._num_models
+
+    @property
+    def num_tenants(self) -> int:
+        return self._num_tenants
+
+    @property
+    def capacity(self) -> int:
+        return len(self.selected)
+
+    def _rebuild_mirrors(self) -> None:
+        """Full host->device refresh; called at construction and on churn
+        events (rare relative to decisions, which update incrementally)."""
+        self._membership_j = jnp.asarray(self.membership)
+        self._cost_j = jnp.asarray(self.cost.astype(np.float32))
+        self._selected_j = jnp.asarray(self.selected)
+        self._best_j = jnp.asarray(
+            np.where(np.isfinite(self.best), self.best,
+                     self._no_obs_floor).astype(np.float32))
+
+    def _grow(self, need_models: int, need_tenants: int) -> None:
+        cap_n, cap_N = self.capacity, self.membership.shape[0]
+        new_n = cap_n
+        while new_n < need_models:
+            new_n *= 2
+        new_N = cap_N
+        while new_N < need_tenants:
+            new_N *= 2
+        if new_n == cap_n and new_N == cap_N:
+            return
+        pad_n, pad_N = new_n - cap_n, new_N - cap_N
+        self.selected = np.concatenate([self.selected, np.ones(pad_n, bool)])
+        self.observed = np.concatenate([self.observed, np.zeros(pad_n, bool)])
+        self.cost = np.concatenate([self.cost, np.ones(pad_n)])
+        self.model_live = np.concatenate([self.model_live, np.zeros(pad_n, bool)])
+        grown = np.zeros((new_N, new_n), dtype=bool)
+        grown[:cap_N, :cap_n] = self.membership
+        self.membership = grown
+        self.best = np.concatenate([self.best, np.full(pad_N, -np.inf)])
+        self.tenant_live = np.concatenate(
+            [self.tenant_live, np.zeros(pad_N, bool)])
+        self.gp.ensure_capacity(new_n)
+
+    def _recompute_floor(self) -> None:
+        stats = [self._tenant_floor_stats[t]
+                 for t in np.nonzero(self.tenant_live)[0]
+                 if t in self._tenant_floor_stats]
+        if not stats:
+            self._no_obs_floor = 0.0
+            return
+        mu_min = min(s[0] for s in stats)
+        sd_max = max(s[1] for s in stats)
+        self._no_obs_floor = mu_min - _FLOOR_SDS * max(sd_max, 1e-3)
+
+    # ---- tenant churn ------------------------------------------------------
+
+    def add_tenant(self, K_block, mu0_block, cost_block) -> TenantHandle:
+        """Admit one tenant: append its GP block, its candidate models, and a
+        tenant slot.  O(m) plus a mirror refresh; no other tenant's GP state
+        is touched."""
+        if not self._dynamic:
+            raise RuntimeError("churn is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        K_block = np.asarray(K_block, dtype=np.float64)
+        mu0_block = np.asarray(mu0_block, dtype=np.float64)
+        cost_block = np.asarray(cost_block, dtype=np.float64)
+        m = len(mu0_block)
+        if K_block.shape != (m, m) or cost_block.shape != (m,):
+            raise ValueError("block shapes disagree")
+        if (cost_block <= 0).any():
+            raise ValueError("costs must be positive")
+        tid = self._num_tenants
+        start = self._num_models
+        self._grow(start + m, tid + 1)
+        self._num_tenants += 1
+        self._num_models += m
+        ids = np.arange(start, start + m, dtype=np.int64)
+        self._block_ids[tid] = self.gp.add_block(ids, K_block, mu0_block)
+        self.selected[ids] = False
+        self.observed[ids] = False
+        self.cost[ids] = cost_block
+        self.model_live[ids] = True
+        self.membership[tid, ids] = True
+        self.best[tid] = -np.inf
+        self.tenant_live[tid] = True
+        self._tenant_floor_stats[tid] = (
+            float(mu0_block.min()),
+            float(np.sqrt(np.clip(np.diag(K_block), 0, None).max())))
+        self._recompute_floor()
+        self._rebuild_mirrors()
+        return TenantHandle(tenant_id=tid, models=ids)
+
+    def retire_tenant(self, tenant_id: int) -> None:
+        """Depart one tenant: its GP block is freed, its models leave the
+        pool (masked selected), its slot stops being served.  In-flight
+        models of the tenant stay selected — the caller decides whether
+        their completions are folded (they cannot be: the block is gone)."""
+        if not self._dynamic:
+            raise RuntimeError("churn is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        if not self.tenant_live[tenant_id]:
+            raise ValueError(f"tenant {tenant_id} is not live")
+        ids = np.nonzero(self.membership[tenant_id])[0]
+        self.gp.retire_block(self._block_ids.pop(tenant_id))
+        self.membership[tenant_id, :] = False
+        self.selected[ids] = True
+        self.model_live[ids] = False
+        self.tenant_live[tenant_id] = False
+        self.best[tenant_id] = -np.inf
+        del self._tenant_floor_stats[tenant_id]
+        self._recompute_floor()
+        self._rebuild_mirrors()
+
+    # ---- event steps -------------------------------------------------------
+
+    def best_effective(self) -> np.ndarray:
+        return np.where(np.isfinite(self.best), self.best, self._no_obs_floor)
+
+    def record_start(self, model: int) -> None:
+        self.selected[model] = True
+        self._selected_j = self._selected_j.at[model].set(True)
+
+    def record_failure(self, model: int) -> None:
+        # Paper's abstraction makes failure handling trivial: the model was
+        # never observed, so it simply returns to L \ L(t).
+        self.selected[model] = False
+        self._selected_j = self._selected_j.at[model].set(False)
+
+    def record_observation(self, model: int, z: float) -> None:
+        self.observed[model] = True
+        self.gp.observe(model, z)
+        users = np.nonzero(self.membership[:, model])[0]
+        for u in users:
+            if z > self.best[u] or not np.isfinite(self.best[u]):
+                self.best[u] = max(z, self.best[u]) if np.isfinite(self.best[u]) else z
+                self._best_j = self._best_j.at[u].set(self.best[u])
+
+    # ---- policy decisions --------------------------------------------------
+
+    def choose_mdmt(self, device_speed: float = 1.0) -> tuple[int, int] | None:
+        if self.selected.all():
+            return None
+        mu, sd = self.gp.posterior_sd()
+        cost = self._cost_j if device_speed == 1.0 else self._cost_j / device_speed
+        if self.scorer == "ops":
+            from repro.kernels import ops
+            scores = ops.eirate(
+                mu, sd, self._best_j, self._membership_j, cost,
+                self._selected_j, use_pallas=jax.default_backend() == "tpu")
+            idx = jnp.argmax(scores)
+            idx, score = int(idx), float(scores[idx])
+        else:
+            idx, score = choose_next_fused(
+                mu, sd, self._best_j, self._membership_j, cost, self._selected_j)
+            idx, score = int(idx), float(score)
+        if not np.isfinite(score) or score <= -1e29:
+            return None
+        return idx, -1
+
+    def _users_with_work(self) -> np.ndarray:
+        has_work = (self.membership & ~self.selected[None, :]).any(axis=1)
+        return np.nonzero(has_work)[0]
+
+    def _own_gp_ei(self, user: int) -> int | None:
+        mu, sd = self.gp.posterior_sd()
+        best = self.best[user] if np.isfinite(self.best[user]) else self._no_obs_floor
+        scores = single_tenant_ei_scores(
+            mu, sd, jnp.asarray(best),
+            self._membership_j[user], jnp.asarray(self.selected))
+        idx = int(jnp.argmax(scores))
+        if not np.isfinite(float(scores[idx])):
+            return None
+        return idx
+
+    def choose_random(self, device_speed: float = 1.0) -> tuple[int, int] | None:
+        users = self._users_with_work()
+        if users.size == 0:
+            return None
+        u = int(self.rng.choice(users))
+        m = self._own_gp_ei(u)
+        return (m, u) if m is not None else None
+
+    def choose_round_robin(self, device_speed: float = 1.0) -> tuple[int, int] | None:
+        users = self._users_with_work()
+        if users.size == 0:
+            return None
+        N = self._num_tenants
+        for step in range(N):
+            u = (self.rr_pointer + step) % N
+            if u in users:
+                self.rr_pointer = (u + 1) % N
+                m = self._own_gp_ei(u)
+                if m is not None:
+                    return m, u
+        return None
+
+    def chooser(self, policy: str):
+        """The decision callable for a policy name (``POLICIES``)."""
+        return {
+            "mdmt": self.choose_mdmt,
+            "random": self.choose_random,
+            "round_robin": self.choose_round_robin,
+        }[policy]

@@ -47,9 +47,14 @@ class Fleet:
                 if s.healthy and s.current_trial is None and s.busy_until <= t]
 
     def fail(self, slice_id: int) -> int | None:
-        """Mark slice failed; returns the killed trial id (to re-queue)."""
+        """Mark slice failed; returns the killed trial id (to re-queue).
+
+        The killed trial's reservation dies with it: ``busy_until`` is reset
+        so a slice repaired before the old reservation would have expired is
+        immediately schedulable."""
         s = self.slices[slice_id]
         s.healthy = False
+        s.busy_until = 0.0
         killed, s.current_trial = s.current_trial, None
         return killed
 

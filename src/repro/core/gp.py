@@ -178,28 +178,93 @@ class BlockIncrementalGP:
     O(m^2) (m = block size, n = N*m total), a ~N x control-plane speedup
     measured in benchmarks/control_plane.py.  Same interface as
     :class:`IncrementalGP`; equivalence is tested in tests/test_gp.py.
+
+    Blocks are also the unit of tenant churn (DESIGN.md §9): because each
+    block owns an independent Cholesky factor, a tenant's covariance block
+    can be appended (:meth:`add_block`) or retired (:meth:`retire_block`)
+    at runtime without refactorizing any other tenant's state.  Retired
+    entries keep their last posterior values in the cached readout; callers
+    mask them (the streaming control plane marks them selected).
     """
 
-    def __init__(self, K, mu0, blocks: list, jitter: float = DEFAULT_JITTER):
+    def __init__(self, K=None, mu0=None, blocks: list | None = None,
+                 jitter: float = DEFAULT_JITTER):
         import numpy as np
-        K = np.asarray(K)
-        mu0 = np.asarray(mu0, dtype=K.dtype)
-        self.n = K.shape[0]
-        self._blocks = [np.asarray(b, dtype=np.int64) for b in blocks]
-        seen = np.concatenate(self._blocks)
-        assert len(seen) == self.n and len(set(seen.tolist())) == self.n, \
-            "blocks must partition the model set"
-        self._engines = [
-            IncrementalGP(K[np.ix_(b, b)], mu0[b], jitter) for b in self._blocks]
-        self._local = {}
-        for bi, b in enumerate(self._blocks):
-            for li, g in enumerate(b.tolist()):
-                self._local[g] = (bi, li)
-        self._mu = mu0.astype(np.float32).copy()
-        self._var = np.clip(np.diag(K), 0, None).astype(np.float32)
+        self._jitter = jitter
+        self.n = 0
+        self._blocks: dict[int, np.ndarray] = {}
+        self._engines: dict[int, IncrementalGP] = {}
+        self._next_block_id = 0
+        self._local: dict[int, tuple[int, int]] = {}
+        self._mu = np.zeros(0, np.float32)
+        self._var = np.zeros(0, np.float32)
         self._dirty: set[int] = set()
         self.observed: list[int] = []
         self._z = {}
+        if K is not None:
+            K = np.asarray(K)
+            mu0 = np.asarray(mu0, dtype=K.dtype)
+            n = K.shape[0]
+            assert blocks is not None, "static construction requires blocks"
+            idx = [np.asarray(b, dtype=np.int64) for b in blocks]
+            seen = np.concatenate(idx)
+            assert len(seen) == n and len(set(seen.tolist())) == n, \
+                "blocks must partition the model set"
+            for b in idx:
+                self.add_block(b, K[np.ix_(b, b)], mu0[b])
+            assert self.n == n
+
+    @classmethod
+    def empty(cls, jitter: float = DEFAULT_JITTER) -> "BlockIncrementalGP":
+        """A dynamic instance with no tenants yet (streaming control plane)."""
+        return cls(jitter=jitter)
+
+    # ---- tenant churn: block lifecycle ------------------------------------
+
+    def ensure_capacity(self, n_cap: int) -> None:
+        """Grow the cached posterior readout to ``n_cap`` entries (padding:
+        mu 0, var 0 — callers mask indices that belong to no block)."""
+        import numpy as np
+        if n_cap <= self.n:
+            return
+        grow = n_cap - self.n
+        self._mu = np.concatenate([self._mu, np.zeros(grow, np.float32)])
+        self._var = np.concatenate([self._var, np.zeros(grow, np.float32)])
+        self.n = n_cap
+
+    def add_block(self, indices, K_block, mu0_block) -> int:
+        """Register one tenant's covariance block at the given global model
+        indices.  O(m) setup; no other block is touched.  Returns a block id
+        for :meth:`retire_block`."""
+        import numpy as np
+        b = np.asarray(indices, dtype=np.int64)
+        K_block = np.asarray(K_block)
+        mu0_block = np.asarray(mu0_block, dtype=K_block.dtype)
+        m = len(b)
+        assert K_block.shape == (m, m) and mu0_block.shape == (m,)
+        clash = [int(g) for g in b if int(g) in self._local]
+        assert not clash, f"indices already owned by a live block: {clash}"
+        bid = self._next_block_id
+        self._next_block_id += 1
+        self.ensure_capacity(int(b.max()) + 1)
+        self._blocks[bid] = b
+        self._engines[bid] = IncrementalGP(K_block, mu0_block, self._jitter)
+        for li, g in enumerate(b.tolist()):
+            self._local[int(g)] = (bid, li)
+        self._mu[b] = mu0_block.astype(np.float32)
+        self._var[b] = np.clip(np.diag(K_block), 0, None).astype(np.float32)
+        self._dirty.discard(bid)
+        return bid
+
+    def retire_block(self, block_id: int) -> None:
+        """Drop one tenant's block: its Cholesky factor is freed and its
+        models stop accepting observations.  Other blocks are untouched
+        (no refactorization).  Cached readout entries go stale — mask them."""
+        b = self._blocks.pop(block_id)
+        self._engines.pop(block_id)
+        self._dirty.discard(block_id)
+        for g in b.tolist():
+            del self._local[int(g)]
 
     @staticmethod
     def blocks_from_membership(K, membership, atol: float = 0.0) -> list | None:
@@ -219,6 +284,8 @@ class BlockIncrementalGP:
         return blocks
 
     def observe(self, idx: int, z_val: float) -> None:
+        if idx not in self._local:
+            raise KeyError(f"model {idx} belongs to no live block")
         bi, li = self._local[idx]
         self._engines[bi].observe(li, z_val)
         self._dirty.add(bi)

@@ -2,9 +2,11 @@
 
 Implements the paper's policy loop: *as long as there is a device available,
 select a model to run on this device*.  The simulator is a discrete-event
-engine over virtual time; all GP/EI math is JAX (see ``gp.py`` / ``ei.py``),
-the event bookkeeping is host Python — exactly the split a real service has
-(control decisions on the coordinator, math on an accelerator).
+engine over virtual time; the per-event decision core (GP update + EIrate
+pick) lives in ``control_plane.ControlPlane`` and is shared with the
+streaming engine (``repro.stream``) — the event bookkeeping here is host
+Python, exactly the split a real service has (control decisions on the
+coordinator, math on an accelerator).
 
 Policies
 --------
@@ -31,11 +33,14 @@ import heapq
 import time as _time
 from dataclasses import dataclass, field
 
-import jax.numpy as jnp
 import numpy as np
 
-from .ei import choose_next_fused, single_tenant_ei_scores
-from .gp import make_gp
+from .control_plane import (  # noqa: F401  (re-exported: sim_batched + tests)
+    ControlPlane,
+    _fastest_models,
+    no_obs_floor,
+    warm_start_queue,
+)
 from .tenancy import Problem
 
 POLICIES = ("mdmt", "round_robin", "random")
@@ -76,136 +81,6 @@ class SimResult:
         return obs
 
 
-def _fastest_models(problem: Problem, user: int, count: int) -> list[int]:
-    idx = np.nonzero(problem.membership[user])[0]
-    order = idx[np.argsort(problem.cost[idx], kind="stable")]
-    return list(order[:count])
-
-
-def no_obs_floor(problem: Problem) -> float:
-    """Finite stand-in for "no observation yet": far below any plausible z,
-    so unserved tenants dominate the EI sum (see DESIGN.md §7).  Shared by
-    both episode engines — the equivalence contract depends on it."""
-    prior_sd = float(np.sqrt(np.clip(np.diag(problem.K), 0, None).max()))
-    return float(problem.mu0.min()) - 5.0 * max(prior_sd, 1e-3)
-
-
-def warm_start_queue(problem: Problem, warm_start: int) -> list[int]:
-    """The initial launch queue: user-major, ``warm_start`` fastest models
-    each, deduplicated keeping first occurrence (Section 6.1 protocol).
-    ``warm_start=0`` yields Algorithm 1 line 1-2's prior-mean argmax per
-    tenant instead.  Shared by both episode engines."""
-    pending: list[int] = []
-    seen: set[int] = set()
-    for u in range(problem.num_users):
-        for m in _fastest_models(problem, u, warm_start):
-            if m not in seen:
-                seen.add(m)
-                pending.append(m)
-    if warm_start == 0:
-        for u in range(problem.num_users):
-            idx = np.nonzero(problem.membership[u])[0]
-            m = int(idx[np.argmax(problem.mu0[idx])])
-            if m not in seen:
-                seen.add(m)
-                pending.append(m)
-    return pending
-
-
-class _PolicyState:
-    """Shared mutable state the policies read."""
-
-    def __init__(self, problem: Problem, rng: np.random.Generator):
-        self.problem = problem
-        self.rng = rng
-        n, N = problem.num_models, problem.num_users
-        self.gp = make_gp(problem.K, problem.mu0, problem.membership)
-        self.selected = np.zeros(n, dtype=bool)   # observed OR in flight
-        self.observed = np.zeros(n, dtype=bool)
-        self.best = np.full(N, -np.inf)           # z(x_i^*(t)), observed best
-        self._no_obs_floor = no_obs_floor(problem)
-        self._membership_j = jnp.asarray(problem.membership)
-        self._cost_j = jnp.asarray(problem.cost.astype(np.float32))
-        # device-resident mirrors updated incrementally (one .at[] per event
-        # instead of a full host->device copy per decision) — §Perf iteration 3
-        self._selected_j = jnp.zeros(n, bool)
-        self._best_j = jnp.full(N, self._no_obs_floor, jnp.float32)
-        self.rr_pointer = 0
-
-    def best_effective(self) -> np.ndarray:
-        return np.where(np.isfinite(self.best), self.best, self._no_obs_floor)
-
-    def record_start(self, model: int) -> None:
-        self.selected[model] = True
-        self._selected_j = self._selected_j.at[model].set(True)
-
-    def record_failure(self, model: int) -> None:
-        # Paper's abstraction makes failure handling trivial: the model was
-        # never observed, so it simply returns to L \ L(t).
-        self.selected[model] = False
-        self._selected_j = self._selected_j.at[model].set(False)
-
-    def record_observation(self, model: int, z: float) -> None:
-        self.observed[model] = True
-        self.gp.observe(model, z)
-        users = np.nonzero(self.problem.membership[:, model])[0]
-        for u in users:
-            if z > self.best[u] or not np.isfinite(self.best[u]):
-                self.best[u] = max(z, self.best[u]) if np.isfinite(self.best[u]) else z
-                self._best_j = self._best_j.at[u].set(self.best[u])
-
-    # ---- policy decisions -------------------------------------------------
-
-    def choose_mdmt(self, device_speed: float = 1.0) -> tuple[int, int] | None:
-        if self.selected.all():
-            return None
-        mu, sd = self.gp.posterior_sd()
-        cost = self._cost_j if device_speed == 1.0 else self._cost_j / device_speed
-        idx, score = choose_next_fused(
-            mu, sd, self._best_j, self._membership_j, cost, self._selected_j)
-        score = float(score)
-        if not np.isfinite(score) or score <= -1e29:
-            return None
-        return int(idx), -1
-
-    def _users_with_work(self) -> np.ndarray:
-        has_work = (self.problem.membership & ~self.selected[None, :]).any(axis=1)
-        return np.nonzero(has_work)[0]
-
-    def _own_gp_ei(self, user: int) -> int | None:
-        mu, sd = self.gp.posterior_sd()
-        best = self.best[user] if np.isfinite(self.best[user]) else self._no_obs_floor
-        scores = single_tenant_ei_scores(
-            mu, sd, jnp.asarray(best),
-            self._membership_j[user], jnp.asarray(self.selected))
-        idx = int(jnp.argmax(scores))
-        if not np.isfinite(float(scores[idx])):
-            return None
-        return idx
-
-    def choose_random(self, device_speed: float = 1.0) -> tuple[int, int] | None:
-        users = self._users_with_work()
-        if users.size == 0:
-            return None
-        u = int(self.rng.choice(users))
-        m = self._own_gp_ei(u)
-        return (m, u) if m is not None else None
-
-    def choose_round_robin(self, device_speed: float = 1.0) -> tuple[int, int] | None:
-        users = self._users_with_work()
-        if users.size == 0:
-            return None
-        N = self.problem.num_users
-        for step in range(N):
-            u = (self.rr_pointer + step) % N
-            if u in users:
-                self.rr_pointer = (u + 1) % N
-                m = self._own_gp_ei(u)
-                if m is not None:
-                    return m, u
-        return None
-
-
 def simulate(
     problem: Problem,
     policy: str,
@@ -228,7 +103,7 @@ def simulate(
         raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
     problem.validate()
     rng = np.random.default_rng(seed)
-    state = _PolicyState(problem, rng)
+    state = ControlPlane.from_problem(problem, rng)
     speeds = np.ones(num_devices) if device_speeds is None else np.asarray(device_speeds, float)
     assert speeds.shape == (num_devices,)
 
@@ -254,11 +129,7 @@ def simulate(
     free = list(range(num_devices))
     t_now = 0.0
 
-    chooser = {
-        "mdmt": state.choose_mdmt,
-        "random": state.choose_random,
-        "round_robin": state.choose_round_robin,
-    }[policy]
+    chooser = state.chooser(policy)
 
     def try_launch() -> None:
         nonlocal decisions, decision_seconds

@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _ssd_kernel(xdt_ref, b_ref, c_ref, la_ref, y_ref, state, *, chunk: int):
     ci = pl.program_id(1)
@@ -98,7 +101,7 @@ def ssd_pallas(
         out_specs=pl.BlockSpec((1, Q, P), lambda g, ci: (g, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, P), jnp.float32),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xdt_h, b, c, la_h)

@@ -1,0 +1,28 @@
+"""Streaming control plane: online multi-device, multi-tenant GP-EI.
+
+The offline engines (``core.scheduler``, ``core.sim_batched``) assume a
+closed world — N tenants known at t=0, the episode ends when every model is
+observed.  This package is the open-world counterpart the ROADMAP's
+production service needs: tenants arrive and depart continuously
+(``workload.py`` generates seeded churn traces), an event loop over a device
+``Fleet`` admits, schedules, and observes them (``engine.py``), and a
+telemetry sink records the service-level metrics — per-tenant regret, device
+utilization, admission-queue depth, time-to-first-observation percentiles
+(``telemetry.py``).
+
+The per-event math is the same ``core.control_plane.ControlPlane`` the
+offline simulators use; with churn disabled the engine reproduces
+``scheduler.simulate``'s trial sequence exactly (tests/test_stream.py).
+See DESIGN.md §9.
+"""
+
+from .engine import StreamEngine, StreamResult, StreamTrial  # noqa: F401
+from .telemetry import TelemetrySink  # noqa: F401
+from .workload import (  # noqa: F401
+    ChurnTrace,
+    SliceFail,
+    TenantArrive,
+    TenantDepart,
+    poisson_churn_trace,
+    trace_from_problem,
+)

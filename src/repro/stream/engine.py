@@ -1,0 +1,324 @@
+"""Event-driven streaming engine: online GP-EI over a Fleet under churn.
+
+The loop generalizes ``scheduler.simulate`` from a closed episode to an open
+service.  External events come from a :class:`~repro.stream.workload.ChurnTrace`
+(tenant arrivals/departures, slice failures); internal events are trial
+completions and slice repairs.  All of them drive one shared
+:class:`~repro.core.control_plane.ControlPlane`:
+
+  TenantArrive  -> admission control; if admitted, ``add_tenant`` appends the
+                   tenant's GP block and its warm-start trials join the queue
+  TenantDepart  -> ``retire_tenant`` frees the GP block; in-flight trials run
+                   to completion but their observations are discarded
+  TrialDone     -> ``record_observation`` (GP fold) + fairness accounting,
+                   then the freed slice launches the next EIrate argmax
+  SliceFail     -> the in-flight trial dies; its model returns to the
+                   unselected pool (``record_failure``); the slice rejoins
+                   after ``downtime``
+
+Admission control caps the number of *live models* (sum of candidate-set
+sizes over admitted, non-departed tenants): a tenant whose block would
+exceed the cap waits in a FIFO queue and is admitted as departures free
+capacity — queue depth is a telemetry series.
+
+Equivalence contract (tested): replaying
+:func:`~repro.stream.workload.trace_from_problem` (all tenants at t=0, no
+departures, no failures, no cap) reproduces ``scheduler.simulate``'s trial
+sequence exactly for the deterministic policies, because both engines share
+the ControlPlane decision core, the warm-start order, and the
+free-device-stack pop order.  Simultaneous arrivals are therefore admitted
+*before* any launch decision (matching the pre-built warm-start queue);
+otherwise the engine launches greedily after every event, exactly like the
+offline loop.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time as _time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.control_plane import ControlPlane, tenant_warm_models
+from repro.core.fleet import Fleet
+from repro.core.scheduler import POLICIES
+
+from .telemetry import TelemetrySink
+from .workload import ChurnTrace, SliceFail, TenantArrive, TenantDepart
+
+
+@dataclass(frozen=True)
+class StreamTrial:
+    """One launched trial.  ``z is None`` means the trial died (slice
+    failure) or was still in flight when the run ended."""
+    model: int               # global model id in the ControlPlane's space
+    tenant_key: int
+    local_model: int         # index within the tenant's candidate set
+    user_hint: int           # -2 warm start, -1 mdmt global, else tenant slot
+    device: int
+    start: float
+    end: float
+    z: float | None
+
+
+@dataclass
+class _TenantRuntime:
+    key: int
+    arrive: TenantArrive
+    admitted_at: float | None = None
+    departed: bool = False
+    tenant_id: int | None = None      # ControlPlane slot once admitted
+    model_start: int | None = None    # first global model id of the block
+
+
+@dataclass
+class StreamResult:
+    trace_name: str
+    policy: str
+    num_devices: int
+    trials: list[StreamTrial]
+    end_time: float
+    decisions: int
+    decision_seconds: float
+    telemetry: TelemetrySink
+    tenants: dict[int, _TenantRuntime] = field(repr=False, default_factory=dict)
+
+    @property
+    def observations(self) -> list[tuple[float, int, float]]:
+        """(finish_time, global model, z) for successful trials, time-ordered."""
+        obs = [(t.end, t.model, t.z) for t in self.trials if t.z is not None]
+        obs.sort()
+        return obs
+
+
+class StreamEngine:
+    """Online multi-tenant GP-EI service over a Fleet (module docstring)."""
+
+    def __init__(
+        self,
+        fleet: Fleet,
+        policy: str = "mdmt",
+        *,
+        warm_start: int = 2,
+        max_live_models: int | None = None,
+        seed: int = 0,
+        scorer: str = "fused",
+        telemetry: TelemetrySink | None = None,
+    ):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        self.fleet = fleet
+        self.policy = policy
+        self.warm_start = warm_start
+        self.max_live_models = max_live_models
+        self.telemetry = telemetry or TelemetrySink()
+        self.cp = ControlPlane(np.random.default_rng(seed), scorer=scorer)
+        self._chooser = self.cp.chooser(policy)
+
+        # mirrors scheduler.simulate's free-device stack: initial pop order is
+        # slice M-1, M-2, ...; freed slices are re-pushed on top
+        self._free: list[int] = [s.slice_id for s in fleet.slices if s.healthy]
+        self._heap: list[tuple[float, int, str, tuple]] = []
+        self._seq = 0
+        self._pending: list[int] = []          # warm-start launch queue
+        self._admission_queue: list[_TenantRuntime] = []
+        self._live_models = 0
+        self._tenants: dict[int, _TenantRuntime] = {}
+        self._owner_of_model: dict[int, _TenantRuntime] = {}
+        self._trials: list[StreamTrial] = []
+        self._cancelled: set[int] = set()
+        self._t = 0.0
+        self._decisions = 0
+        self._decision_seconds = 0.0
+
+    # ---- event plumbing ----------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: tuple) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    # ---- admission ---------------------------------------------------------
+
+    def _fits(self, tr: _TenantRuntime) -> bool:
+        return (self.max_live_models is None
+                or self._live_models + tr.arrive.num_models <= self.max_live_models)
+
+    def _admit(self, tr: _TenantRuntime) -> None:
+        ev = tr.arrive
+        handle = self.cp.add_tenant(ev.K_block, ev.mu0, ev.cost)
+        tr.tenant_id = handle.tenant_id
+        tr.model_start = int(handle.models[0])
+        tr.admitted_at = self._t
+        self._live_models += ev.num_models
+        for g in handle.models:
+            self._owner_of_model[int(g)] = tr
+        self._pending.extend(
+            tr.model_start + li
+            for li in tenant_warm_models(ev.cost, ev.mu0, self.warm_start))
+        self.telemetry.on_admit(self._t, tr.key)
+
+    def _drain_admission_queue(self) -> None:
+        admitted = False
+        while self._admission_queue and self._fits(self._admission_queue[0]):
+            self._admit(self._admission_queue.pop(0))
+            admitted = True
+        if admitted or self._admission_queue:
+            self.telemetry.on_queue_depth(self._t, len(self._admission_queue))
+
+    # ---- event handlers ----------------------------------------------------
+
+    def _handle_arrive(self, tr: _TenantRuntime) -> None:
+        best_possible = float(np.max(tr.arrive.z_true))
+        self.telemetry.on_arrive(self._t, tr.key, best_possible)
+        if not self._admission_queue and self._fits(tr):
+            self._admit(tr)
+        else:
+            self._admission_queue.append(tr)
+            self.telemetry.on_queue_depth(self._t, len(self._admission_queue))
+
+    def _handle_depart(self, key: int) -> None:
+        tr = self._tenants[key]
+        if tr.departed:
+            return
+        tr.departed = True
+        self.telemetry.on_depart(self._t, key)
+        if tr.tenant_id is None:
+            # never admitted: drop it from the waiting line — whoever was
+            # stuck behind it may fit now (FIFO head-of-line blocking)
+            self._admission_queue = [q for q in self._admission_queue
+                                     if q.key != key]
+            self.telemetry.on_queue_depth(self._t, len(self._admission_queue))
+            self._drain_admission_queue()
+            return
+        self.cp.retire_tenant(tr.tenant_id)
+        self._live_models -= tr.arrive.num_models
+        self._drain_admission_queue()
+
+    def _handle_finish(self, device: int, model: int, ti: int) -> None:
+        if ti in self._cancelled:
+            return
+        tr = self._owner_of_model[model]
+        t = self._trials[ti]
+        if tr.departed:
+            self.telemetry.on_rejected_observation(
+                self._t, tr.key, t.end - t.start)
+        else:
+            z = float(tr.arrive.z_true[model - tr.model_start])
+            self._trials[ti] = StreamTrial(
+                t.model, t.tenant_key, t.local_model, t.user_hint,
+                t.device, t.start, t.end, z)
+            self.cp.record_observation(model, z)
+            self.telemetry.on_observation(
+                self._t, tr.key, model, z, t.end - t.start)
+        self.fleet.slices[device].current_trial = None
+        self._free.append(device)
+
+    def _handle_slice_fail(self, slice_id: int, downtime: float) -> None:
+        s = self.fleet.slices[slice_id]
+        if not s.healthy:
+            return                       # already down; one repair is pending
+        killed_ti = self.fleet.fail(slice_id)
+        if killed_ti is not None:
+            self._cancelled.add(killed_ti)
+            t = self._trials[killed_ti]
+            self._trials[killed_ti] = StreamTrial(
+                t.model, t.tenant_key, t.local_model, t.user_hint,
+                t.device, t.start, self._t, None)
+            owner = self._owner_of_model[t.model]
+            if not owner.departed:
+                # never observed => the model returns to L \ L(t)
+                self.cp.record_failure(t.model)
+            self.telemetry.on_trial_failed(
+                self._t, t.tenant_key, t.model, self._t - t.start)
+        elif slice_id in self._free:
+            self._free.remove(slice_id)
+        self._push(self._t + downtime, "recover", (slice_id,))
+
+    def _handle_recover(self, slice_id: int) -> None:
+        self.fleet.recover(slice_id)
+        s = self.fleet.slices[slice_id]
+        if s.current_trial is None and slice_id not in self._free:
+            self._free.append(slice_id)
+
+    # ---- the launch loop (mirrors scheduler.simulate.try_launch) -----------
+
+    def _try_launch(self, horizon: float) -> None:
+        while self._free:
+            if self._t >= horizon:
+                return
+            d = self._free[-1]
+            s = self.fleet.slices[d]
+            if self._pending:
+                model, hint = self._pending.pop(0), -2
+                if self.cp.selected[model]:
+                    continue             # observed/in-flight/retired meanwhile
+            else:
+                t0 = _time.perf_counter()
+                pick = self._chooser(device_speed=s.speed)
+                self._decision_seconds += _time.perf_counter() - t0
+                self._decisions += 1
+                if pick is None:
+                    return
+                model, hint = pick
+            self._free.pop()
+            owner = self._owner_of_model[model]
+            dur = float(self.cp.cost[model]) / s.speed
+            end = self._t + dur
+            self.cp.record_start(model)
+            ti = len(self._trials)
+            s.current_trial = ti
+            s.busy_until = end
+            self._trials.append(StreamTrial(
+                model, owner.key, model - owner.model_start, hint, d,
+                self._t, end, None))
+            self._push(end, "finish", (d, model, ti))
+            self.telemetry.on_launch(self._t, owner.key, model, d, dur)
+
+    # ---- the loop ----------------------------------------------------------
+
+    def run(self, trace: ChurnTrace, horizon: float = np.inf) -> StreamResult:
+        """Replay one trace to completion (or ``horizon``) and return the
+        trial log + telemetry.  A fresh engine per run."""
+        for ev in trace:
+            if isinstance(ev, TenantArrive):
+                tr = _TenantRuntime(key=ev.tenant_key, arrive=ev)
+                self._tenants[ev.tenant_key] = tr
+                self._push(ev.at, "arrive", (tr,))
+            elif isinstance(ev, TenantDepart):
+                self._push(ev.at, "depart", (ev.tenant_key,))
+            elif isinstance(ev, SliceFail):
+                self._push(ev.at, "slice_fail", (ev.slice_id, ev.downtime))
+            else:
+                raise TypeError(f"unknown trace event {ev!r}")
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t >= horizon:
+                break
+            self._t = t
+            if kind == "arrive":
+                self._handle_arrive(*payload)
+            elif kind == "depart":
+                self._handle_depart(*payload)
+            elif kind == "finish":
+                self._handle_finish(*payload)
+            elif kind == "slice_fail":
+                self._handle_slice_fail(*payload)
+            elif kind == "recover":
+                self._handle_recover(*payload)
+            # simultaneous arrivals are admitted as one batch before any
+            # launch — this is what makes the churn-free replay line up with
+            # simulate()'s pre-built warm-start queue
+            if (kind == "arrive" and self._heap
+                    and self._heap[0][0] == t and self._heap[0][2] == "arrive"):
+                continue
+            self._try_launch(horizon)
+
+        self.telemetry.on_end(self._t, self.fleet.num_devices)
+        return StreamResult(
+            trace_name=trace.name, policy=self.policy,
+            num_devices=self.fleet.num_devices, trials=self._trials,
+            end_time=self._t, decisions=self._decisions,
+            decision_seconds=self._decision_seconds,
+            telemetry=self.telemetry, tenants=self._tenants)

@@ -1,0 +1,162 @@
+"""Service telemetry for the streaming control plane.
+
+The engine calls the ``on_*`` hooks as events happen; the sink aggregates
+them into the metrics a service operator watches:
+
+  * per-tenant regret — ``z(x*) - z(best observed)`` at session end, plus
+    the max over live tenants (the streaming analogue of the paper's
+    max-over-tenants / global-happiness regret);
+  * fairness — time-since-served per tenant (gap between consecutive
+    observations for the same tenant), distribution + worst case;
+  * device utilization — busy seconds / (M * elapsed);
+  * admission-queue depth over time (admission control backpressure);
+  * time-to-first-observation per session, p50/p99.
+
+``summary()`` returns a plain dict; ``to_json(path)`` writes it — the same
+payload ``benchmarks/stream_churn.py`` records into ``BENCH_stream_churn.json``.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclass
+class _TenantStats:
+    arrived: float
+    admitted: float | None = None
+    departed: float | None = None
+    first_obs: float | None = None
+    last_served: float | None = None
+    num_obs: int = 0
+    best_z: float = -np.inf
+    best_possible: float = -np.inf
+    serve_gaps: list[float] = field(default_factory=list)
+
+
+def _pct(values, q) -> float | None:
+    return float(np.percentile(values, q)) if len(values) else None
+
+
+class TelemetrySink:
+    """Aggregates engine events into service-level metrics (module docstring)."""
+
+    def __init__(self):
+        self.tenants: dict[int, _TenantStats] = {}
+        self.queue_depth_samples: list[tuple[float, int]] = []
+        self.busy_seconds = 0.0
+        self.num_trials = 0
+        self.num_failed_trials = 0
+        self.num_rejected_observations = 0
+        self.end_time = 0.0
+        self.num_slices = 0
+
+    # ---- hooks the engine drives ------------------------------------------
+
+    def on_arrive(self, t: float, tenant_key: int, best_possible: float) -> None:
+        self.tenants[tenant_key] = _TenantStats(
+            arrived=t, best_possible=best_possible)
+
+    def on_admit(self, t: float, tenant_key: int) -> None:
+        st = self.tenants[tenant_key]
+        st.admitted = t
+        st.last_served = t   # staleness clock starts at admission
+
+    def on_depart(self, t: float, tenant_key: int) -> None:
+        self.tenants[tenant_key].departed = t
+
+    def on_queue_depth(self, t: float, depth: int) -> None:
+        self.queue_depth_samples.append((t, depth))
+
+    def on_launch(self, t: float, tenant_key: int, model: int, device: int,
+                  duration: float) -> None:
+        self.num_trials += 1
+
+    def on_observation(self, t: float, tenant_key: int, model: int,
+                       z: float, duration: float) -> None:
+        self.busy_seconds += duration
+        st = self.tenants.get(tenant_key)
+        if st is None:
+            return
+        if st.first_obs is None:
+            st.first_obs = t
+        if st.last_served is not None:
+            st.serve_gaps.append(t - st.last_served)
+        st.last_served = t
+        st.num_obs += 1
+        st.best_z = max(st.best_z, z)
+
+    def on_trial_failed(self, t: float, tenant_key: int, model: int,
+                        busy_seconds: float) -> None:
+        self.num_failed_trials += 1
+        self.busy_seconds += busy_seconds   # the slice was occupied until death
+
+    def on_rejected_observation(self, t: float, tenant_key: int,
+                                duration: float) -> None:
+        """A trial finished after its tenant departed — result discarded,
+        but the slice was busy for the full duration."""
+        self.num_rejected_observations += 1
+        self.busy_seconds += duration
+
+    def on_end(self, t: float, num_slices: int) -> None:
+        self.end_time = t
+        self.num_slices = num_slices
+
+    # ---- aggregation -------------------------------------------------------
+
+    def summary(self) -> dict:
+        served = [st for st in self.tenants.values() if st.first_obs is not None]
+        ttfo = [st.first_obs - st.arrived for st in served]
+        gaps = [g for st in self.tenants.values() for g in st.serve_gaps]
+        regrets = [st.best_possible - st.best_z for st in served
+                   if np.isfinite(st.best_possible)]
+        admitted = [st for st in self.tenants.values() if st.admitted is not None]
+        queue_max = max((d for _, d in self.queue_depth_samples), default=0)
+        elapsed = max(self.end_time, 1e-12)
+        return {
+            "sessions": len(self.tenants),
+            "sessions_admitted": len(admitted),
+            "sessions_served": len(served),
+            "trials": self.num_trials,
+            "trials_failed": self.num_failed_trials,
+            "observations_rejected_after_depart": self.num_rejected_observations,
+            "end_time": self.end_time,
+            "device_utilization": (
+                self.busy_seconds / (self.num_slices * elapsed)
+                if self.num_slices else 0.0),
+            "queue_depth_max": queue_max,
+            "ttfo_p50": _pct(ttfo, 50),
+            "ttfo_p99": _pct(ttfo, 99),
+            "serve_gap_p50": _pct(gaps, 50),
+            "serve_gap_max": max(gaps, default=None),
+            "tenant_regret_mean": float(np.mean(regrets)) if regrets else None,
+            "tenant_regret_max": float(np.max(regrets)) if regrets else None,
+        }
+
+    def per_tenant(self) -> dict[int, dict]:
+        out = {}
+        for key, st in self.tenants.items():
+            out[key] = {
+                "arrived": st.arrived,
+                "admitted": st.admitted,
+                "departed": st.departed,
+                "first_obs": st.first_obs,
+                "num_obs": st.num_obs,
+                "best_z": None if not np.isfinite(st.best_z) else st.best_z,
+                "regret": (st.best_possible - st.best_z
+                           if np.isfinite(st.best_possible)
+                           and np.isfinite(st.best_z) else None),
+            }
+        return out
+
+    def to_json(self, path: str | Path, include_tenants: bool = True) -> Path:
+        payload = {"summary": self.summary()}
+        if include_tenants:
+            payload["tenants"] = {str(k): v for k, v in self.per_tenant().items()}
+        path = Path(path)
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True))
+        return path

@@ -1,0 +1,181 @@
+"""Churn traces: the external event streams the streaming engine replays.
+
+A :class:`ChurnTrace` is a time-sorted tuple of external events:
+
+  * :class:`TenantArrive` — a tenant session starts; the event carries the
+    tenant's whole TSHB block (prior covariance, prior mean, costs, and the
+    ground-truth ``z`` the simulation reveals on observation);
+  * :class:`TenantDepart` — the session ends (the engine retires the
+    tenant's GP block and returns its unobserved models to nowhere);
+  * :class:`SliceFail`   — a device slice dies for ``downtime`` seconds,
+    killing its in-flight trial (the model returns to the unselected pool).
+
+:func:`poisson_churn_trace` generates the service-provider workload the
+Ease.ml setting motivates: Poisson arrivals, heavy-tailed (Pareto) session
+lengths, Zipf-skewed candidate-set sizes, per-tenant Matérn-5/2 priors —
+everything seeded, so traces replay bit-identically.
+:func:`trace_from_problem` freezes an offline :class:`~repro.core.tenancy.Problem`
+into a churn-free trace (all tenants at t=0, nobody departs) — the
+equivalence bridge to ``scheduler.simulate``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.tenancy import Problem, _matern_block_chol, _matern_draw
+
+
+@dataclass(frozen=True)
+class TenantArrive:
+    at: float
+    tenant_key: int
+    K_block: np.ndarray      # (m, m) prior covariance over the candidate set
+    mu0: np.ndarray          # (m,) prior mean
+    cost: np.ndarray         # (m,) c(x), virtual seconds
+    z_true: np.ndarray       # (m,) ground truth, revealed on observation
+
+    @property
+    def num_models(self) -> int:
+        return len(self.mu0)
+
+
+@dataclass(frozen=True)
+class TenantDepart:
+    at: float
+    tenant_key: int
+
+
+@dataclass(frozen=True)
+class SliceFail:
+    at: float
+    slice_id: int
+    downtime: float
+
+
+Event = TenantArrive | TenantDepart | SliceFail
+
+
+@dataclass(frozen=True)
+class ChurnTrace:
+    """Time-sorted external events plus bookkeeping for telemetry."""
+
+    events: tuple[Event, ...]
+    name: str = "trace"
+
+    def __post_init__(self):
+        ats = [e.at for e in self.events]
+        if ats != sorted(ats):
+            raise ValueError("trace events must be time-sorted")
+
+    @property
+    def num_sessions(self) -> int:
+        return sum(1 for e in self.events if isinstance(e, TenantArrive))
+
+    @property
+    def num_events(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+
+def zipf_candidate_sizes(
+    rng: np.random.Generator, count: int, s: float = 1.6,
+    m_min: int = 2, m_max: int = 50,
+) -> np.ndarray:
+    """Zipf-skewed candidate-set sizes: most tenants bring a few models, a
+    heavy tail brings many (clipped to [m_min, m_max])."""
+    if s <= 1.0:
+        raise ValueError("zipf exponent must be > 1")
+    raw = rng.zipf(s, size=count)
+    return np.clip(m_min * raw, m_min, m_max).astype(int)
+
+
+def poisson_churn_trace(
+    num_sessions: int = 200,
+    arrival_rate: float = 1.0,
+    seed: int = 0,
+    *,
+    session_scale: float = 40.0,
+    pareto_alpha: float = 1.5,
+    zipf_s: float = 1.6,
+    m_min: int = 2,
+    m_max: int = 50,
+    length_scale: float = 0.2,
+    kernel_variance: float = 0.04,
+    cost: str = "uniform",
+    num_failure_slices: int = 0,
+    failure_downtime: float = 5.0,
+    name: str | None = None,
+) -> ChurnTrace:
+    """The service-provider workload: N ≫ M tenant sessions over time.
+
+    Arrivals are Poisson(``arrival_rate``); session lengths are Pareto
+    (heavy-tailed: ``(1 + pareto(alpha)) * session_scale``); candidate-set
+    sizes are Zipf-skewed; each tenant's block is a Matérn-5/2 prior with a
+    ground-truth sample drawn from it (the Fig-5 generative model, per
+    tenant).  ``cost`` is ``"uniform"`` (all 1) or ``"lognormal"``.
+    ``num_failure_slices > 0`` sprinkles that many SliceFail events over
+    slices [0, num_failure_slices) across the arrival window.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / arrival_rate, size=num_sessions)
+    arrive_at = np.cumsum(gaps)
+    lengths = (1.0 + rng.pareto(pareto_alpha, size=num_sessions)) * session_scale
+    sizes = zipf_candidate_sizes(rng, num_sessions, zipf_s, m_min, m_max)
+
+    # one Cholesky per distinct block size (the expensive part is shared)
+    chol_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    events: list[Event] = []
+    for i in range(num_sessions):
+        m = int(sizes[i])
+        if m not in chol_cache:
+            chol_cache[m] = _matern_block_chol(m, length_scale, kernel_variance)
+        K_block, L = chol_cache[m]
+        z = _matern_draw(rng, L)
+        if cost == "uniform":
+            c = np.ones(m)
+        elif cost == "lognormal":
+            c = rng.lognormal(mean=0.0, sigma=0.5, size=m)
+        else:
+            raise ValueError(cost)
+        events.append(TenantArrive(
+            at=float(arrive_at[i]), tenant_key=i, K_block=K_block,
+            mu0=np.zeros(m), cost=c, z_true=z))
+        events.append(TenantDepart(
+            at=float(arrive_at[i] + lengths[i]), tenant_key=i))
+
+    if num_failure_slices > 0:
+        horizon = float(arrive_at[-1])
+        for s in range(num_failure_slices):
+            events.append(SliceFail(
+                at=float(rng.uniform(0.0, horizon)), slice_id=s,
+                downtime=failure_downtime))
+
+    events.sort(key=lambda e: e.at)
+    return ChurnTrace(
+        events=tuple(events),
+        name=name or f"poisson-{num_sessions}sessions-s{seed}")
+
+
+def trace_from_problem(problem: Problem, at: float = 0.0) -> ChurnTrace:
+    """Freeze an offline Problem into a churn-free trace: every tenant
+    arrives at ``at`` in tenant order, nobody departs.  Requires disjoint
+    candidate sets (every generator in ``tenancy.py`` qualifies).  Replaying
+    this trace reproduces ``scheduler.simulate`` exactly (tests/test_stream.py).
+    """
+    mem = np.asarray(problem.membership, bool)
+    if (mem.sum(axis=0) != 1).any():
+        raise ValueError("trace_from_problem requires disjoint candidate sets")
+    events = []
+    for u in range(problem.num_users):
+        ids = np.nonzero(mem[u])[0]
+        events.append(TenantArrive(
+            at=at, tenant_key=u,
+            K_block=problem.K[np.ix_(ids, ids)],
+            mu0=problem.mu0[ids], cost=problem.cost[ids],
+            z_true=problem.z_true[ids]))
+    return ChurnTrace(events=tuple(events), name=f"{problem.name}-frozen")

@@ -1,0 +1,96 @@
+"""BlockIncrementalGP runtime block add/retire (tenant churn, DESIGN.md §9).
+
+Separate from test_gp.py because these tests have no hypothesis dependency
+(test_gp.py skips entirely when hypothesis is missing).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.gp import BlockIncrementalGP, IncrementalGP
+
+from conftest import random_psd
+
+
+def test_add_block_matches_static_construction(rng):
+    """Blocks added one by one == the same blocks at construction time."""
+    blocks = [np.arange(0, 4), np.arange(4, 9), np.arange(9, 12)]
+    n = 12
+    K = np.zeros((n, n))
+    mu0 = rng.standard_normal(n)
+    for b in blocks:
+        K[np.ix_(b, b)] = random_psd(rng, len(b))
+    static = BlockIncrementalGP(K, mu0, blocks)
+    dyn = BlockIncrementalGP.empty()
+    for b in blocks:
+        dyn.add_block(b, K[np.ix_(b, b)], mu0[b])
+    z = rng.standard_normal(n)
+    for i in (1, 5, 10, 6, 0):
+        static.observe(int(i), float(z[i]))
+        dyn.observe(int(i), float(z[i]))
+    mu_s, var_s = static.posterior()
+    mu_d, var_d = dyn.posterior()
+    np.testing.assert_array_equal(np.asarray(mu_s), np.asarray(mu_d))
+    np.testing.assert_array_equal(np.asarray(var_s), np.asarray(var_d))
+
+
+def test_retire_block_leaves_others_untouched(rng):
+    dyn = BlockIncrementalGP.empty()
+    Ks, mus, bids = [], [], []
+    for bi in range(3):
+        m = 4
+        Kb = random_psd(rng, m)
+        mu = rng.standard_normal(m)
+        Ks.append(Kb); mus.append(mu)
+        bids.append(dyn.add_block(np.arange(bi * m, (bi + 1) * m), Kb, mu))
+    z = rng.standard_normal(12)
+    for i in (0, 5, 9, 2):
+        dyn.observe(int(i), float(z[i]))
+    mu_before, var_before = map(np.asarray, dyn.posterior())
+    dyn.retire_block(bids[1])
+    mu_after, var_after = map(np.asarray, dyn.posterior())
+    keep = np.r_[0:4, 8:12]
+    np.testing.assert_array_equal(mu_before[keep], mu_after[keep])
+    np.testing.assert_array_equal(var_before[keep], var_after[keep])
+    # retired models stop accepting observations...
+    with pytest.raises(KeyError):
+        dyn.observe(5, 0.0)
+    # ...but live blocks keep working, and the result matches a fresh engine
+    dyn.observe(10, float(z[10]))
+    ref = IncrementalGP(Ks[2], mus[2])
+    ref.observe(1, float(z[9]))
+    ref.observe(2, float(z[10]))
+    mu_ref, var_ref = map(np.asarray, ref.posterior())
+    mu_now = np.asarray(dyn.posterior()[0])
+    np.testing.assert_array_equal(mu_now[8:12], mu_ref)
+
+
+def test_add_after_retire_appends_at_new_indices(rng):
+    dyn = BlockIncrementalGP.empty()
+    b0 = dyn.add_block(np.arange(0, 3), random_psd(rng, 3), np.zeros(3))
+    dyn.retire_block(b0)
+    # new tenants get fresh index space; the retired range stays dead
+    b1 = dyn.add_block(np.arange(3, 6), random_psd(rng, 3), np.ones(3))
+    assert b1 != b0
+    dyn.observe(4, 0.7)
+    with pytest.raises(KeyError):
+        dyn.observe(0, 0.1)
+    assert dyn.n >= 6
+
+
+def test_ensure_capacity_pads_readout(rng):
+    dyn = BlockIncrementalGP.empty()
+    dyn.add_block(np.arange(0, 2), random_psd(rng, 2), np.zeros(2))
+    dyn.ensure_capacity(10)
+    mu, var = dyn.posterior()
+    assert mu.shape == (10,) and var.shape == (10,)
+    # padding is inert: mu 0, var 0
+    assert float(np.asarray(mu)[5]) == 0.0
+    assert float(np.asarray(var)[5]) == 0.0
+
+
+def test_duplicate_indices_rejected(rng):
+    dyn = BlockIncrementalGP.empty()
+    dyn.add_block(np.arange(0, 3), random_psd(rng, 3), np.zeros(3))
+    with pytest.raises(AssertionError):
+        dyn.add_block(np.arange(2, 5), random_psd(rng, 3), np.zeros(3))

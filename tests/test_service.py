@@ -67,3 +67,55 @@ def test_service_cost_model_updates_from_measured():
     before = dict(service.cost_model._measured)
     service.run(max_trials=2)
     assert len(service.cost_model._measured) > len(before)
+
+
+class CrashingExecutor(FakeExecutor):
+    """Raises on the Nth trial launch — simulates a coordinator dying with
+    trials in flight (the checkpoint then holds selected-but-unobserved
+    models)."""
+
+    def __init__(self, z_table, crash_at, seconds=1.0):
+        super().__init__(z_table, seconds)
+        self.crash_at = crash_at
+
+    def run(self, tenant, arch):
+        if len(self.calls) + 1 >= self.crash_at:
+            raise RuntimeError("coordinator crash")
+        return super().run(tenant, arch)
+
+
+def test_service_crash_mid_episode_restores_and_replays(tmp_path):
+    """Kill the coordinator mid-episode, restart from the JSON checkpoint:
+    in-flight trials are re-queued and the combined trial sequence matches
+    an uninterrupted run exactly."""
+    import json
+
+    ck = tmp_path / "svc.json"
+    service0, _, _ = make_service()
+    service0.run()
+    uninterrupted = [t.model for t in service0.trials]
+
+    # crash while trial #3 is still in flight (2 completed, 1 launched)
+    tenants = [TenantSpec(i, i, 1.2) for i in range(3)]
+    z = {(t.tenant_id, a): 0.3 + 0.1 * ((t.tenant_id + j) % 3)
+         for t in tenants for j, a in enumerate(ARCHS)}
+    crashed = AutoMLService(
+        tenants, ARCHS, Fleet.partition_pod(256, 2),
+        CrashingExecutor(z, crash_at=4), ServiceConfig(),
+        checkpoint_path=str(ck))
+    with pytest.raises(RuntimeError):
+        crashed.run()
+    state = json.loads(ck.read_text())
+    completed = [int(k) for k in state["observations"]]
+    assert sum(state["selected"]) > len(completed), "crash left trials in flight"
+
+    # fresh coordinator, same checkpoint
+    restored, _, _ = make_service(tmp_path)
+    assert restored.restore()
+    # in-flight trials were re-queued: only completed trials stay selected
+    assert int(restored.selected.sum()) == len(restored.gp.observed) == len(completed)
+    restored.run()
+    combined = completed + [t.model for t in restored.trials]
+    assert combined == uninterrupted
+    # nothing trained twice, nothing lost
+    assert sorted(combined) == list(range(restored.n))

@@ -1,0 +1,235 @@
+"""Streaming control plane: churn engine vs the offline simulator (DESIGN.md §9)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ControlPlane, simulate, synthetic_matern_problem
+from repro.core.fleet import Fleet
+from repro.stream import (
+    StreamEngine,
+    TenantArrive,
+    TenantDepart,
+    SliceFail,
+    ChurnTrace,
+    poisson_churn_trace,
+    trace_from_problem,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return synthetic_matern_problem(num_users=6, num_models_per_user=8, seed=3)
+
+
+def fleet_of(n):
+    return Fleet.partition_pod(total_chips=16 * n, num_slices=n)
+
+
+# --- equivalence: churn disabled == scheduler.simulate ------------------------
+
+@pytest.mark.parametrize("policy", ["mdmt", "round_robin"])
+@pytest.mark.parametrize("num_devices", [1, 3])
+def test_no_churn_matches_simulate(problem, policy, num_devices):
+    """The acceptance gate: all tenants at t=0, none depart => the streaming
+    engine replays the offline engine's trial sequence exactly."""
+    res = simulate(problem, policy, num_devices=num_devices, seed=0)
+    eng = StreamEngine(fleet_of(num_devices), policy, seed=0)
+    sres = eng.run(trace_from_problem(problem))
+    assert [(t.model, t.device) for t in sres.trials] == \
+           [(t.model, t.device) for t in res.trials]
+    np.testing.assert_allclose(
+        [t.start for t in sres.trials], [t.start for t in res.trials])
+    np.testing.assert_allclose(
+        [t.end for t in sres.trials], [t.end for t in res.trials])
+    assert [t.z for t in sres.trials] == [t.z for t in res.trials]
+
+
+def test_no_churn_matches_simulate_no_warm_start(problem):
+    res = simulate(problem, "mdmt", num_devices=2, seed=0, warm_start=0)
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0, warm_start=0)
+    sres = eng.run(trace_from_problem(problem))
+    assert [(t.model, t.device) for t in sres.trials] == \
+           [(t.model, t.device) for t in res.trials]
+
+
+def test_no_churn_heterogeneous_speeds(problem):
+    speeds = [1.0, 4.0]
+    res = simulate(problem, "mdmt", num_devices=2, seed=0,
+                   device_speeds=np.asarray(speeds))
+    fleet = Fleet.partition_pod(32, 2, speeds=speeds)
+    sres = StreamEngine(fleet, "mdmt", seed=0).run(trace_from_problem(problem))
+    assert [(t.model, t.device) for t in sres.trials] == \
+           [(t.model, t.device) for t in res.trials]
+
+
+# --- churn semantics ----------------------------------------------------------
+
+def _tiny_tenant(key, at, m=3, seed=0, z=None):
+    rng = np.random.default_rng(seed)
+    K = 0.04 * np.eye(m) + 0.01
+    z = rng.uniform(0.2, 0.9, m) if z is None else np.asarray(z, float)
+    return TenantArrive(at=at, tenant_key=key, K_block=K,
+                        mu0=np.full(m, 0.5), cost=np.ones(m), z_true=z)
+
+
+def test_churn_trace_end_to_end_n_much_greater_than_m():
+    """200 sessions over time on M=8 slices (the acceptance scenario)."""
+    trace = poisson_churn_trace(num_sessions=200, arrival_rate=1.0, seed=0,
+                                m_min=2, m_max=16, session_scale=25.0,
+                                num_failure_slices=2)
+    assert trace.num_sessions == 200
+    eng = StreamEngine(fleet_of(8), "mdmt", seed=0, max_live_models=120)
+    res = eng.run(trace)
+    s = res.telemetry.summary()
+    assert s["sessions"] == 200
+    assert s["trials"] > 200
+    assert 0 < s["sessions_admitted"] <= 200
+    # admission control actually engaged under N >> M pressure
+    assert s["queue_depth_max"] > 0
+    # every successful observation belongs to an admitted tenant, and no
+    # model is observed twice
+    seen = [t.model for t in res.trials if t.z is not None]
+    assert len(seen) == len(set(seen))
+    # the cap was respected at all times (checked via engine accounting)
+    assert eng._live_models <= 120
+
+
+def test_departed_tenant_stops_being_served():
+    ta = _tiny_tenant(0, at=0.0, m=4, seed=1)
+    tb = _tiny_tenant(1, at=0.0, m=4, seed=2)
+    trace = ChurnTrace((ta, tb, TenantDepart(at=2.5, tenant_key=0)))
+    res = StreamEngine(fleet_of(1), "mdmt", seed=0).run(trace)
+    # after the departure, no tenant-0 launches
+    for t in res.trials:
+        if t.start >= 2.5:
+            assert t.tenant_key == 1
+    # tenant 1 is fully explored eventually
+    t1_obs = {t.local_model for t in res.trials
+              if t.tenant_key == 1 and t.z is not None}
+    assert t1_obs == set(range(4))
+
+
+def test_observation_after_depart_is_discarded():
+    # one slow trial for tenant 0 in flight when the tenant departs
+    ta = _tiny_tenant(0, at=0.0, m=2, seed=1)
+    ta = TenantArrive(at=0.0, tenant_key=0, K_block=ta.K_block, mu0=ta.mu0,
+                      cost=np.array([10.0, 10.0]), z_true=ta.z_true)
+    trace = ChurnTrace((ta, TenantDepart(at=1.0, tenant_key=0)))
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0)
+    res = eng.run(trace)
+    s = res.telemetry.summary()
+    assert s["observations_rejected_after_depart"] == 2
+    assert all(t.z is None for t in res.trials)
+
+
+def test_admission_control_queues_and_admits_on_departure():
+    t0 = _tiny_tenant(0, at=0.0, m=4, seed=1)
+    t1 = _tiny_tenant(1, at=1.0, m=4, seed=2)   # doesn't fit: must queue
+    trace = ChurnTrace((
+        t0, t1, TenantDepart(at=6.0, tenant_key=0)))
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0, max_live_models=4)
+    res = eng.run(trace)
+    r1 = res.tenants[1]
+    assert r1.admitted_at is not None and r1.admitted_at >= 6.0
+    assert res.telemetry.summary()["queue_depth_max"] == 1
+    # the queued tenant is served after admission
+    assert any(t.tenant_key == 1 and t.z is not None for t in res.trials)
+
+
+def test_slice_failure_requeues_model_and_slice_recovers():
+    ta = _tiny_tenant(0, at=0.0, m=3, seed=1)
+    ta = TenantArrive(at=0.0, tenant_key=0, K_block=ta.K_block, mu0=ta.mu0,
+                      cost=np.full(3, 4.0), z_true=ta.z_true)
+    trace = ChurnTrace((ta, SliceFail(at=1.0, slice_id=0, downtime=2.0)))
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0)
+    res = eng.run(trace)
+    failed = [t for t in res.trials if t.z is None]
+    assert len(failed) == 1 and failed[0].end == 1.0
+    # the killed model is re-issued after repair and eventually observed
+    observed = {t.local_model for t in res.trials if t.z is not None}
+    assert failed[0].local_model in observed
+    assert observed == {0, 1, 2}
+
+
+def test_telemetry_json_roundtrip(tmp_path):
+    trace = poisson_churn_trace(num_sessions=10, arrival_rate=1.0, seed=2,
+                                m_min=2, m_max=6, session_scale=20.0)
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0)
+    res = eng.run(trace)
+    path = res.telemetry.to_json(tmp_path / "telemetry.json")
+    payload = json.loads(path.read_text())
+    assert payload["summary"]["sessions"] == 10
+    assert set(payload["tenants"]) == {str(k) for k in range(10)}
+    assert payload["summary"]["device_utilization"] >= 0.0
+
+
+# --- dynamic ControlPlane details --------------------------------------------
+
+def test_control_plane_capacity_growth_preserves_decisions(problem):
+    """A tiny initial capacity (forcing several doublings) must not change
+    any decision vs a roomy one."""
+    m = 8
+    small = ControlPlane(np.random.default_rng(0), model_capacity=2,
+                         tenant_capacity=1)
+    big = ControlPlane(np.random.default_rng(0), model_capacity=256,
+                       tenant_capacity=16)
+    for cp in (small, big):
+        for u in range(problem.num_users):
+            sl = slice(u * m, (u + 1) * m)
+            cp.add_tenant(problem.K[sl, sl], problem.mu0[sl], problem.cost[sl])
+    for _ in range(10):
+        a, b = small.choose_mdmt(), big.choose_mdmt()
+        assert a == b
+        small.record_start(a[0]); big.record_start(a[0])
+        z = float(problem.z_true[a[0]])
+        small.record_observation(a[0], z); big.record_observation(a[0], z)
+
+
+def test_control_plane_rejects_churn_on_static_instances(problem):
+    cp = ControlPlane.from_problem(problem)
+    with pytest.raises(RuntimeError):
+        cp.add_tenant(np.eye(2), np.zeros(2), np.ones(2))
+    with pytest.raises(RuntimeError):
+        cp.retire_tenant(0)
+
+
+def test_scorer_ops_matches_fused(problem):
+    """The kernels/ops.eirate scoring path picks the same models as the
+    fused XLA path (same math, different dispatch)."""
+    fused = ControlPlane.from_problem(problem, scorer="fused")
+    ops_cp = ControlPlane.from_problem(problem, scorer="ops")
+    for _ in range(8):
+        a, b = fused.choose_mdmt(), ops_cp.choose_mdmt()
+        assert a == b
+        z = float(problem.z_true[a[0]])
+        for cp in (fused, ops_cp):
+            cp.record_start(a[0]); cp.record_observation(a[0], z)
+
+
+def test_queued_tenant_departure_unblocks_the_line():
+    """Regression: a queued (never-admitted) tenant leaving must let the
+    tenants stuck behind it through — not wait for an *admitted* departure."""
+    a = _tiny_tenant(0, at=0.0, m=8, seed=1)
+    b = _tiny_tenant(1, at=1.0, m=5, seed=2)   # queued: 8+5 > 10
+    c = _tiny_tenant(2, at=2.0, m=2, seed=3)   # queued behind b (FIFO)
+    trace = ChurnTrace((a, b, c, TenantDepart(at=3.0, tenant_key=1)))
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0, max_live_models=10)
+    res = eng.run(trace)
+    rc = res.tenants[2]
+    assert rc.admitted_at == 3.0   # admitted the moment b left the queue head
+    assert res.tenants[1].admitted_at is None
+
+
+def test_rejected_observations_count_as_busy_time():
+    """Regression: a slice that ran a departed tenant's trial to completion
+    was busy — utilization must reflect it."""
+    ta = _tiny_tenant(0, at=0.0, m=2, seed=1)
+    ta = TenantArrive(at=0.0, tenant_key=0, K_block=ta.K_block, mu0=ta.mu0,
+                      cost=np.array([10.0, 10.0]), z_true=ta.z_true)
+    trace = ChurnTrace((ta, TenantDepart(at=1.0, tenant_key=0)))
+    res = StreamEngine(fleet_of(2), "mdmt", seed=0).run(trace)
+    s = res.telemetry.summary()
+    assert s["observations_rejected_after_depart"] == 2
+    assert s["device_utilization"] == pytest.approx(1.0)

@@ -152,3 +152,15 @@ def test_fleet_failure_and_recovery():
     assert len(fleet.free_at(0.0)) == 3
     fleet.recover(1)
     assert len(fleet.free_at(0.0)) == 4
+
+
+def test_fleet_repaired_slice_is_immediately_schedulable():
+    """Regression: a failed slice whose killed trial had reserved it far into
+    the future must be free right after repair, not at the stale busy_until."""
+    fleet = Fleet.partition_pod(total_chips=256, num_slices=2)
+    s = fleet.slices[0]
+    s.current_trial = 7
+    s.busy_until = 100.0          # the killed trial would have run until t=100
+    fleet.fail(0)
+    fleet.recover(0)
+    assert s in fleet.free_at(5.0)
