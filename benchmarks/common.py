@@ -23,6 +23,39 @@ from pathlib import Path
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
 
+# Version of the BENCH_<suite>.json payload shape.  Bump when the envelope
+# changes incompatibly; row keys may grow freely within a version.
+#   1: {"schema_version", "git_sha", "suite", "rows": {name: {...}}}
+#      (pre-versioned files were the bare rows dict)
+BENCH_SCHEMA_VERSION = 1
+
+
+def set_fast(value: bool = True) -> None:
+    """Flip FAST at runtime (benchmarks.run --smoke).  Must run before the
+    section modules are imported — they bind ``FAST`` at import time."""
+    global FAST
+    FAST = value
+    os.environ["BENCH_FAST"] = "1" if value else "0"
+
+
+def git_sha() -> str:
+    """Short git SHA of the working tree (env override GIT_SHA for CI
+    detached states), or "unknown" outside a repo."""
+    sha = os.environ.get("GIT_SHA")
+    if sha:
+        return sha[:12]
+    try:
+        import subprocess
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
 # rows of the suite currently being recorded (None = recording disabled);
 # benchmarks/run.py brackets each section with begin_suite()/end_suite() so
 # the perf trajectory lands in machine-readable BENCH_<suite>.json files
@@ -40,14 +73,22 @@ def begin_suite(name: str) -> None:
 
 def end_suite(out_dir: str | Path = ".") -> Path | None:
     """Write the recorded rows to BENCH_<suite>.json and stop recording.
-    Returns the path (None if nothing was recorded)."""
+    Returns the path (None if nothing was recorded).  Every emission is
+    stamped with the schema version and the git SHA it was measured at, so
+    the committed perf trajectory stays machine-comparable across PRs."""
     global _suite_name, _suite_rows
     name, rows = _suite_name, _suite_rows
     _suite_name = _suite_rows = None
     if name is None or rows is None:
         return None
+    payload = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "suite": name,
+        "rows": rows,
+    }
     path = Path(out_dir) / f"BENCH_{name}.json"
-    path.write_text(json.dumps(rows, indent=2, sort_keys=True))
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True))
     return path
 
 
@@ -77,7 +118,15 @@ def parse_engine_args(argv=None) -> argparse.Namespace:
         description="episode-engine selection (shared by fig2-5)")
     p.add_argument("--engine", choices=("event", "batched"), default="event")
     p.add_argument("--seeds", type=positive_int, default=None)
+    # handled by benchmarks.run before sections import; accepted here so the
+    # flag survives the strict stray-flag check when argv passes through
+    p.add_argument("--smoke", action="store_true")
     args, rest = p.parse_known_args(argv)
+    if args.smoke and not FAST:
+        # standalone figure scripts bind FAST at import, long before this
+        # parse — silently running full-size shapes would betray the flag
+        p.error("--smoke only takes effect via `python -m benchmarks.run "
+                "--smoke`; for a standalone figure script set BENCH_FAST=1")
     stray = [t for t in rest if t.startswith("-")]
     if stray:
         p.error(f"unrecognized arguments: {' '.join(stray)}")

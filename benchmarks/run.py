@@ -12,6 +12,9 @@ Sections (default: all):
   fig5      synthetic Matérn near-linear-speedup sweep
   control   control-plane microbenchmarks (GP/EI hot path)
   stream    streaming control plane under tenant churn (stream_churn)
+  shard     sharded scoring plane: decision latency vs |L| x mesh size
+            (shard_scale; multi-shard rows need forced host devices, e.g.
+            XLA_FLAGS=--xla_force_host_platform_device_count=4)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -38,13 +41,14 @@ import traceback
 from . import common
 from .common import positive_int
 
-SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "roofline")
+SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
+            "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
     "fig2": "fig2", "fig3": "fig3", "fig4": "fig4", "fig5": "fig5",
     "control": "control_plane", "stream": "stream_churn",
-    "roofline": "roofline",
+    "shard": "shard_scale", "roofline": "roofline",
 }
 
 
@@ -60,6 +64,9 @@ def _parse_args():
                    help="episode engine for fig2-5 (default: event)")
     p.add_argument("--seeds", type=positive_int, default=None,
                    help="seeds per configuration for fig2-5")
+    p.add_argument("--smoke", action="store_true",
+                   help="toy shapes for every suite (sets BENCH_FAST=1 "
+                        "before section import) — the CI smoke job")
     # strict parse: run.py declares every flag the figure scripts accept, so
     # a typo'd flag fails loudly here instead of silently running defaults
     args = p.parse_args()
@@ -71,6 +78,9 @@ def _parse_args():
 
 def main() -> None:
     args = _parse_args()
+    if args.smoke:
+        # must precede the lazy section imports: they bind common.FAST then
+        common.set_fast(True)
     want = list(args.sections) or list(SECTIONS)
     print("name,us_per_call,derived")
     failures = []
@@ -88,6 +98,8 @@ def main() -> None:
                 from . import control_plane as m
             elif section == "stream":
                 from . import stream_churn as m
+            elif section == "shard":
+                from . import shard_scale as m
             elif section == "roofline":
                 from . import roofline as m
             else:

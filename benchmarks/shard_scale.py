@@ -1,0 +1,169 @@
+"""Sharded scoring plane at scale: decision latency vs |L| and mesh size.
+
+Three measurements (DESIGN.md §10):
+
+* ``shard_decide_L{n}_S{s}`` — one full decision (readout -> EIrate ->
+  global argmax) over |L| live models on an s-way shard mesh, via the
+  fused ``shardgp.score._readout_decide`` program: each shard streams its
+  slice of the (k_obs, n) W readout buffer once, scores locally, reduces
+  its top-k, and one all_gather picks the global argmax.  Strong scaling:
+  fixed |L|, growing mesh.
+
+* ``shard_weak_L{n}_S{s}`` — weak scaling: |L| = per_shard * s, so each
+  shard's slice stays constant; ``eff`` is t(S=1)/t(S) (1.0 = perfect).
+
+* ``shard_compaction_L{n}`` — index-space compaction pause: a churned
+  control plane (half the tenants retired, maximally skewed spans) timed
+  through one full ``compact()`` rebalance + mirror refresh.
+
+Mesh sizes sweep {1, 2, 4, 8} clipped to the visible device count — on one
+real device only S=1 runs; CI forces a 4-device host mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.  On this CPU
+container the "devices" share the same cores, so the scaling numbers
+validate plumbing and shape-stability, not speedup; the kernel path is the
+XLA reference off-TPU (``kernels/ops`` dispatch rule).
+
+|L|=1M is gated behind BENCH_SHARD_1M=1 (the W buffer alone is
+k_obs * 1M * 4 bytes).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import FAST, emit, time_us
+
+K_OBS = 64          # observed-set rows of the synthetic W readout buffer
+TOPK = 4
+
+
+def _mesh_sizes() -> list[int]:
+    import jax
+    avail = len(jax.devices())
+    return [s for s in (1, 2, 4, 8) if s <= avail]
+
+
+def _sizes() -> list[int]:
+    if FAST:
+        return [2048]
+    sizes = [10_000, 100_000]
+    if os.environ.get("BENCH_SHARD_1M", "0") == "1":
+        sizes.append(1_000_000)
+    return sizes
+
+
+def _synthetic_state(n: int, num_tenants: int, rng: np.random.Generator):
+    """A service-scale scoring state with a plausible posterior: W rows are
+    damped random directions (so var = kdiag - sum W^2 stays positive),
+    one owner per model (the dynamic plane's invariant)."""
+    W = (rng.standard_normal((K_OBS, n)) * 0.05).astype(np.float32)
+    alpha = rng.standard_normal(K_OBS).astype(np.float32)
+    mu0 = np.zeros(n, dtype=np.float32)
+    kdiag = (0.04 + (W * W).sum(axis=0)).astype(np.float32)
+    best = rng.uniform(-0.5, 0.5, num_tenants).astype(np.float32)
+    owner = rng.integers(0, num_tenants, size=n)
+    member = np.zeros((num_tenants, n), dtype=bool)
+    member[owner, np.arange(n)] = True
+    cost = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    selected = rng.random(n) < 0.1
+    return W, alpha, mu0, kdiag, best, member, cost, selected
+
+
+def _bench_decide(n: int, shards: int, iters: int) -> float:
+    """µs per fused readout->score->argmax decision at |L|=n on ``shards``."""
+    import jax
+
+    from repro.shardgp import ShardedScorer
+
+    from jax.sharding import NamedSharding
+
+    from repro.shardgp.score import P_MODELS, P_W
+
+    rng = np.random.default_rng(0)
+    num_tenants = max(8, min(256, n // 64))
+    cap = ((n + shards - 1) // shards) * shards
+    W, alpha, mu0, kdiag, best, member, cost, selected = _synthetic_state(
+        cap, num_tenants, rng)
+    sc = ShardedScorer(shards, topk=TOPK)
+    sc.refresh(member, cost)
+    # the W buffer and per-model vectors are device-resident in the service
+    # hot loop — pre-place them so the timing measures the decision program,
+    # not a 25MB host->device copy per call
+    W = jax.device_put(W, NamedSharding(sc.mesh, P_W))
+    mu0 = jax.device_put(mu0, NamedSharding(sc.mesh, P_MODELS))
+    kdiag = jax.device_put(kdiag, NamedSharding(sc.mesh, P_MODELS))
+    selected = jax.device_put(selected, NamedSharding(sc.mesh, P_MODELS))
+
+    def decide():
+        return jax.block_until_ready(sc.readout_decide_topk(
+            W, alpha, mu0, kdiag, best, selected))
+
+    return time_us(decide, iters=iters, warmup=2)
+
+
+def bench_strong_and_weak_scaling() -> None:
+    iters = 5 if FAST else 20
+    meshes = _mesh_sizes()
+    base_weak: dict[int, float] = {}
+
+    for n in _sizes():
+        base = None
+        for s in meshes:
+            us = _bench_decide(n, s, iters)
+            if base is None:
+                base = us
+            emit(f"shard_decide_L{n}_S{s}", us, live_models=n, shards=s,
+                 k_obs=K_OBS, topk=TOPK, speedup=f"{base / us:.2f}")
+
+    per_shard = 2048 if FAST else 25_000
+    for s in meshes:
+        n = per_shard * s
+        us = _bench_decide(n, s, iters)
+        if s == 1:
+            base_weak[per_shard] = us
+        eff = base_weak[per_shard] / us
+        emit(f"shard_weak_L{n}_S{s}", us, live_models=n, shards=s,
+             per_shard=per_shard, eff=f"{eff:.2f}")
+
+
+def bench_compaction_pause() -> None:
+    """Wall-clock of one compact() rebalance on a churned control plane."""
+    from repro.core import ControlPlane
+    from repro.core.tenancy import _matern_block_chol
+
+    tenants = 16 if FAST else 128
+    m = 16
+    shards = max(_mesh_sizes())
+    K_block, _ = _matern_block_chol(m, 0.2, 0.04)
+    cp = ControlPlane(np.random.default_rng(0), model_capacity=tenants * m,
+                      tenant_capacity=tenants, num_shards=shards)
+    handles = [cp.add_tenant(K_block, np.zeros(m), np.ones(m))
+               for _ in range(tenants)]
+    rng = np.random.default_rng(1)
+    # one observation per tenant (the layout spreads blocks across spans,
+    # so tenant t's ids come from its handle, not t*m arithmetic)
+    for h in handles:
+        g = int(h.models[rng.integers(m)])
+        cp.record_start(g)
+        cp.record_observation(g, float(rng.uniform()))
+    # retire every other tenant -> skewed spans, lots of movable blocks
+    for t in range(0, tenants, 2):
+        cp.retire_tenant(t)
+    t0 = time.perf_counter()
+    remap = cp.compact(1.05)
+    pause_us = (time.perf_counter() - t0) * 1e6
+    emit(f"shard_compaction_L{tenants * m}", pause_us,
+         tenants_live=tenants // 2, moves=len(remap), shards=shards,
+         imbalance_after=f"{cp._layout.imbalance():.2f}")
+
+
+def main() -> None:
+    bench_strong_and_weak_scaling()
+    bench_compaction_pause()
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,11 @@ Two measurements:
 
 * ``stream_decision_10k`` — decision latency at service scale: a dynamic
   ControlPlane holding |L| ~ 10k live models across 200 tenants; one EIrate
-  decision (GP readout + batched scoring + argmax) on the hot loop, for both
-  scorer paths (the fused XLA dispatch and the ``kernels/ops.eirate``
-  entry point — Pallas on TPU, its XLA reference here).
+  decision (GP readout + batched scoring + argmax) on the hot loop, for all
+  three scorer paths (the fused XLA dispatch, the ``kernels/ops.eirate``
+  entry point — Pallas on TPU, its XLA reference here — and the sharded
+  shard_map program of DESIGN.md §10).  The mesh-size/|L| sweep lives in
+  ``benchmarks/shard_scale.py``.
 """
 
 from __future__ import annotations
@@ -57,12 +59,23 @@ def bench_end_to_end() -> None:
 
 
 def bench_decision_at_scale() -> None:
-    """One EIrate decision at |L| ~ 10k live models (the service-scale bar)."""
+    """One EIrate decision at |L| ~ 10k live models (the service-scale bar).
+
+    Timing goes through common.time_us (warm-up iterations + a terminal
+    ``jax.block_until_ready``) on a wrapper that returns the *device
+    arrays* of the decision, so the number measures kernel execution, not
+    async dispatch — and the warm-up keeps one-time jit compilation out of
+    the loop."""
+    import jax
+
+    from repro.core.ei import choose_next_fused
+    from repro.kernels import ops as kops
+
     tenants = 40 if FAST else 200
     m = 50
     K_block, L = _matern_block_chol(m, 0.2, 0.04)
     rng = np.random.default_rng(0)
-    for scorer in ("fused", "ops"):
+    for scorer in ("fused", "ops", "sharded"):
         cp = ControlPlane(np.random.default_rng(0), scorer=scorer,
                           model_capacity=tenants * m, tenant_capacity=tenants)
         for _ in range(tenants):
@@ -74,9 +87,33 @@ def bench_decision_at_scale() -> None:
                 cp.record_start(g)
                 cp.record_observation(g, float(rng.uniform(0.0, 1.0)))
         n_live = tenants * m
-        us = time_us(cp.choose_mdmt, iters=10 if FAST else 30)
+        mu, sd = cp.gp.posterior_sd()
+
+        if scorer == "fused":
+            def decide():
+                return choose_next_fused(mu, sd, cp._best_j,
+                                         cp._membership_j, cp._cost_j,
+                                         cp._selected_j)
+        elif scorer == "ops":
+            def decide():
+                scores = kops.eirate(
+                    mu, sd, cp._best_j, cp._membership_j, cp._cost_j,
+                    cp._selected_j,
+                    use_pallas=jax.default_backend() == "tpu")
+                return scores.argmax()
+        else:
+            def decide():
+                return cp._sharded.decide_topk(mu, sd, cp._best_j,
+                                               cp.selected)
+
+        def decide_sync():
+            return jax.block_until_ready(decide())
+
+        us = time_us(decide_sync, iters=10 if FAST else 30,
+                     warmup=2 if FAST else 5)
+        shards = cp._sharded.num_shards if scorer == "sharded" else 1
         emit(f"stream_decision_{scorer}_L{n_live}", us,
-             tenants=tenants, live_models=n_live)
+             tenants=tenants, live_models=n_live, shards=shards)
 
 
 def main() -> None:

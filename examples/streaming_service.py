@@ -62,8 +62,11 @@ def main() -> None:
     # smoke-test invariants: the run must have actually served tenants
     assert s["sessions"] == sessions
     assert s["trials"] > 0 and s["sessions_served"] > 0
-    seen = [t.model for t in res.trials if t.z is not None]
-    assert len(seen) == len(set(seen)), "a model was observed twice"
+    # (global model ids are recycled across sessions — DESIGN.md §10 — so
+    # uniqueness holds per tenant, not per id)
+    seen = [(t.tenant_key, t.local_model) for t in res.trials
+            if t.z is not None]
+    assert len(seen) == len(set(seen)), "a tenant model was observed twice"
     print("ok")
 
 

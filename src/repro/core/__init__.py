@@ -9,7 +9,9 @@ Control-plane stack (see DESIGN.md for the full design rationale):
   tenancy.py       TSHB problem instances (Azure / DeepLearning / Matérn synthetic)
   control_plane.py the per-event decision core (GP fold + EIrate pick),
                    shared by every engine; closed-world (from_problem) and
-                   open-world (tenant churn) construction — DESIGN.md §9
+                   open-world (tenant churn) construction — DESIGN.md §9;
+                   slot reuse + the multi-device sharded scorer live in
+                   repro.shardgp (scorer="sharded") — DESIGN.md §10
   scheduler.py     event-driven MM-GP-EI + round-robin/random baselines
                    (one episode, host event loop; failures + horizons supported)
   sim_batched.py   batched synchronous-slot engine: many episodes as one

@@ -28,12 +28,24 @@ Scoring is always the batched multi-tenant EIrate pass over the whole pool:
 (``ei.choose_next_fused``); ``scorer="ops"`` routes through the
 ``repro.kernels.ops.eirate`` entry point — the Pallas kernel on TPU, its XLA
 reference elsewhere — so the streaming hot loop exercises the same code the
-kernel benchmarks measure.
+kernel benchmarks measure; ``scorer="sharded"`` partitions the model axis
+over a device mesh and runs the decision as one ``shard_map`` program
+(``repro.shardgp``, DESIGN.md §10) — decision-equivalent to ``fused``
+including tie-breaking, provided both planes use the same ``num_shards``
+(the index-space layout is part of the tie-break order).
+
+Index space (dynamic mode): model slots and tenant slots are *recycled* —
+``retire_tenant`` returns them to a free pool (``shardgp.layout``) and later
+admissions reuse them, so buffers grow with the live-model cap, not with
+total models ever admitted.  ``compact()`` additionally relocates idle
+tenant blocks between shard spans to keep the sharded scorer's load
+imbalance bounded.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from heapq import heappop, heappush
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +55,7 @@ from .ei import choose_next_fused, single_tenant_ei_scores
 from .gp import DEFAULT_JITTER, BlockIncrementalGP, make_gp
 from .tenancy import Problem
 
-SCORERS = ("fused", "ops")
+SCORERS = ("fused", "ops", "sharded")
 
 _FLOOR_SDS = 5.0  # "no observation yet" sits this many prior sds below mu0
 
@@ -116,16 +128,31 @@ class ControlPlane:
         scorer: str = "fused",
         model_capacity: int = 64,
         tenant_capacity: int = 8,
+        num_shards: int | None = None,
+        shard_topk: int = 4,
+        score_kernel: str = "xla",
     ):
         if scorer not in SCORERS:
             raise ValueError(f"scorer must be one of {SCORERS}, got {scorer!r}")
+        from repro.shardgp import ShardedScorer, ShardLayout
         self.rng = rng or np.random.default_rng(0)
         self.scorer = scorer
         self._jitter = jitter
         self._dynamic = True
-        self._num_models = 0        # high-water mark of allocated model ids
+        self._num_models = 0        # count of LIVE models
         self._num_tenants = 0       # high-water mark of tenant slots
+        self._free_tenant_slots: list[int] = []   # min-heap of retired slots
+        self._sharded = (ShardedScorer(num_shards, topk=shard_topk,
+                                       kernel=score_kernel)
+                         if scorer == "sharded" else None)
+        shards = (self._sharded.num_shards if self._sharded is not None
+                  else (num_shards or 1))
         cap_n = max(1, model_capacity)
+        # every tenant block lives inside one shard span; slot reuse +
+        # compaction keep this space O(live cap) under churn (DESIGN.md §10)
+        self._layout = ShardLayout(
+            num_shards=shards, shard_capacity=-(-cap_n // shards))
+        cap_n = self._layout.capacity
         cap_N = max(1, tenant_capacity)
         # padding entries are born selected so every chooser masks them
         self.selected = np.ones(cap_n, dtype=bool)
@@ -151,6 +178,9 @@ class ControlPlane:
         *,
         jitter: float = DEFAULT_JITTER,
         scorer: str = "fused",
+        num_shards: int | None = None,
+        shard_topk: int = 4,
+        score_kernel: str = "xla",
     ) -> "ControlPlane":
         """Closed-world construction: all tenants at t=0, exact shapes.
 
@@ -167,6 +197,15 @@ class ControlPlane:
         cp._dynamic = False
         cp._num_models = n
         cp._num_tenants = N
+        cp._free_tenant_slots = []
+        cp._layout = None           # closed world: no churn, no reuse
+        if scorer == "sharded":
+            from repro.shardgp import ShardedScorer
+            # pads n to a shard multiple internally
+            cp._sharded = ShardedScorer(num_shards, topk=shard_topk,
+                                        kernel=score_kernel)
+        else:
+            cp._sharded = None
         cp.selected = np.zeros(n, dtype=bool)
         cp.observed = np.zeros(n, dtype=bool)
         cp.cost = np.asarray(problem.cost, dtype=np.float64).copy()
@@ -186,6 +225,8 @@ class ControlPlane:
 
     @property
     def num_models(self) -> int:
+        """Live models (dynamic mode recycles slots, so this is a count of
+        the current pool, not an allocation high-water mark)."""
         return self._num_models
 
     @property
@@ -205,6 +246,8 @@ class ControlPlane:
         self._best_j = jnp.asarray(
             np.where(np.isfinite(self.best), self.best,
                      self._no_obs_floor).astype(np.float32))
+        if self._sharded is not None:
+            self._sharded.refresh(self.membership, self.cost)
 
     def _grow(self, need_models: int, need_tenants: int) -> None:
         cap_n, cap_N = self.capacity, self.membership.shape[0]
@@ -243,9 +286,11 @@ class ControlPlane:
     # ---- tenant churn ------------------------------------------------------
 
     def add_tenant(self, K_block, mu0_block, cost_block) -> TenantHandle:
-        """Admit one tenant: append its GP block, its candidate models, and a
-        tenant slot.  O(m) plus a mirror refresh; no other tenant's GP state
-        is touched."""
+        """Admit one tenant: its GP block, candidate models, and tenant slot
+        come from the free pools when churn left any (slot reuse, DESIGN.md
+        §10), else extend the space.  O(m) plus a mirror refresh; no other
+        tenant's GP state is touched.  The block always lands inside one
+        shard span of the layout."""
         if not self._dynamic:
             raise RuntimeError("churn is only supported on dynamic "
                                "ControlPlanes (not from_problem)")
@@ -257,10 +302,11 @@ class ControlPlane:
             raise ValueError("block shapes disagree")
         if (cost_block <= 0).any():
             raise ValueError("costs must be positive")
-        tid = self._num_tenants
-        start = self._num_models
-        self._grow(start + m, tid + 1)
-        self._num_tenants += 1
+        tid = (heappop(self._free_tenant_slots) if self._free_tenant_slots
+               else self._num_tenants)
+        start = self._layout.place(tid, m)
+        self._grow(self._layout.capacity, tid + 1)
+        self._num_tenants = max(self._num_tenants, tid + 1)
         self._num_models += m
         ids = np.arange(start, start + m, dtype=np.int64)
         self._block_ids[tid] = self.gp.add_block(ids, K_block, mu0_block)
@@ -280,9 +326,10 @@ class ControlPlane:
 
     def retire_tenant(self, tenant_id: int) -> None:
         """Depart one tenant: its GP block is freed, its models leave the
-        pool (masked selected), its slot stops being served.  In-flight
-        models of the tenant stay selected — the caller decides whether
-        their completions are folded (they cannot be: the block is gone)."""
+        pool (masked selected) and their slots return to the free pool for
+        the next admission, its tenant slot likewise.  In-flight models of
+        the tenant stay selected — the caller decides whether their
+        completions are folded (they cannot be: the block is gone)."""
         if not self._dynamic:
             raise RuntimeError("churn is only supported on dynamic "
                                "ControlPlanes (not from_problem)")
@@ -292,12 +339,66 @@ class ControlPlane:
         self.gp.retire_block(self._block_ids.pop(tenant_id))
         self.membership[tenant_id, :] = False
         self.selected[ids] = True
+        self.observed[ids] = False
+        self.cost[ids] = 1.0
         self.model_live[ids] = False
         self.tenant_live[tenant_id] = False
         self.best[tenant_id] = -np.inf
         del self._tenant_floor_stats[tenant_id]
+        self._layout.release(tenant_id)
+        heappush(self._free_tenant_slots, tenant_id)
+        self._num_models -= len(ids)
         self._recompute_floor()
         self._rebuild_mirrors()
+
+    def in_flight_mask(self) -> np.ndarray:
+        """Models launched but not yet observed (their global ids are baked
+        into pending completion events — compaction must not move them)."""
+        return self.selected & ~self.observed & self.model_live
+
+    def compact(self, max_imbalance: float | None = None) -> dict[int, tuple]:
+        """Rebalance live tenant blocks across shard spans until the load
+        imbalance sits within ``max_imbalance`` (shardgp.compact).  Tenants
+        with in-flight trials are pinned.  Returns ``{tenant_id: (old_ids,
+        new_ids)}`` so callers holding global model ids (the streaming
+        engine's launch queue / ownership maps) can remap.  With one shard
+        this is a no-op."""
+        if not self._dynamic:
+            raise RuntimeError("compaction is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        from repro.shardgp import compact as _compact
+        if max_imbalance is None:
+            max_imbalance = _compact.DEFAULT_MAX_IMBALANCE
+        in_flight = self.in_flight_mask()
+        movable = {
+            int(t) for t in np.nonzero(self.tenant_live)[0]
+            if not in_flight[self.membership[t]].any()}
+        moves = _compact.plan_moves(self._layout, movable, max_imbalance)
+        first_old: dict[int, np.ndarray] = {}
+        for tid, old_start, new_start in moves:
+            m = self._layout.blocks[tid].length
+            old_ids = np.arange(old_start, old_start + m, dtype=np.int64)
+            new_ids = np.arange(new_start, new_start + m, dtype=np.int64)
+            self.gp.relocate_block(self._block_ids[tid], new_ids)
+            for arr, fill in ((self.selected, True), (self.observed, False),
+                              (self.cost, 1.0), (self.model_live, False)):
+                vals = arr[old_ids].copy()
+                arr[old_ids] = fill
+                arr[new_ids] = vals
+            self.membership[tid, old_ids] = False
+            self.membership[tid, new_ids] = True
+            first_old.setdefault(tid, old_ids)
+        if moves:
+            self._rebuild_mirrors()
+        # compose per-tenant hops: a block can move more than once in one
+        # pass, and callers hold the ORIGINAL ids — map them to the final
+        # placement, not an intermediate one
+        remap: dict[int, tuple] = {}
+        for tid, old_ids in first_old.items():
+            pl = self._layout.blocks[tid]
+            remap[tid] = (old_ids,
+                          np.arange(pl.start, pl.stop, dtype=np.int64))
+        return remap
 
     # ---- event steps -------------------------------------------------------
 
@@ -328,6 +429,20 @@ class ControlPlane:
     def choose_mdmt(self, device_speed: float = 1.0) -> tuple[int, int] | None:
         if self.selected.all():
             return None
+        if self.scorer == "sharded":
+            # stay on host buffers until the sharded upload: the block
+            # engine's cache is numpy, and float32 sqrt is bit-deterministic,
+            # so this matches the fused path's jnp sqrt exactly
+            if hasattr(self.gp, "posterior_host"):
+                mu, var = self.gp.posterior_host()
+                sd = np.sqrt(var)
+            else:
+                mu, sd = self.gp.posterior_sd()
+            idx, score = self._sharded.decide(
+                mu, sd, self._best_j, self.selected, device_speed)
+            if not np.isfinite(score) or score <= -1e29:
+                return None
+            return idx, -1
         mu, sd = self.gp.posterior_sd()
         cost = self._cost_j if device_speed == 1.0 else self._cost_j / device_speed
         if self.scorer == "ops":

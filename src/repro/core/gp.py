@@ -266,6 +266,33 @@ class BlockIncrementalGP:
         for g in b.tolist():
             del self._local[int(g)]
 
+    def relocate_block(self, block_id: int, new_indices) -> None:
+        """Move a live block to new global indices (index-space compaction,
+        DESIGN.md §10).  The Cholesky factor and every observation are
+        position-independent (they live in block-local coordinates), so this
+        is O(m) bookkeeping: remap the global->local index, move the cached
+        readout values, and leave the vacated entries inert (mu 0, var 0 —
+        the padding convention)."""
+        import numpy as np
+        old = self._blocks[block_id]
+        new = np.asarray(new_indices, dtype=np.int64)
+        assert new.shape == old.shape, "relocation must preserve block size"
+        own = set(old.tolist())
+        clash = [int(g) for g in new
+                 if int(g) in self._local and int(g) not in own]
+        assert not clash, f"target indices owned by a live block: {clash}"
+        self.ensure_capacity(int(new.max()) + 1)
+        for g in old.tolist():
+            del self._local[int(g)]
+        for li, g in enumerate(new.tolist()):
+            self._local[int(g)] = (block_id, li)
+        mu_b, var_b = self._mu[old].copy(), self._var[old].copy()
+        self._mu[old] = 0.0
+        self._var[old] = 0.0
+        self._mu[new] = mu_b
+        self._var[new] = var_b
+        self._blocks[block_id] = new
+
     @staticmethod
     def blocks_from_membership(K, membership, atol: float = 0.0) -> list | None:
         """Tenant partition if candidate sets are disjoint and K has no
@@ -296,7 +323,7 @@ class BlockIncrementalGP:
     def num_observed(self) -> int:
         return len(self.observed)
 
-    def posterior(self):
+    def _flush(self) -> None:
         import numpy as np
         for bi in self._dirty:
             mu_b, var_b = self._engines[bi].posterior()
@@ -304,7 +331,18 @@ class BlockIncrementalGP:
             self._mu[b] = np.asarray(mu_b)
             self._var[b] = np.asarray(var_b)
         self._dirty.clear()
+
+    def posterior(self):
+        self._flush()
         return jnp.asarray(self._mu), jnp.asarray(self._var)
+
+    def posterior_host(self):
+        """(mu, var) as the engine's own host numpy buffers (read-only by
+        convention — callers must not mutate).  The sharded scorer consumes
+        these directly: wrapping them in device arrays here only to convert
+        back before the sharded upload would round-trip every decision."""
+        self._flush()
+        return self._mu, self._var
 
     def posterior_sd(self):
         mu, var = self.posterior()

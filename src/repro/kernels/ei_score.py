@@ -72,6 +72,59 @@ def _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref, member_ref,
         out_ref[0, :] = jnp.where(selected_ref[0, :] > 0, NEG_LARGE, score)
 
 
+def _block_topk(score_row, k: int, block_base):
+    """Block-local top-k of a (1, bn) score tile, VPU-only: k unrolled
+    max / min-index-at-max / mask rounds (no sort — Mosaic has no top_k).
+    Equal values resolve to the lowest index, matching both ``jnp.argmax``
+    and ``jax.lax.top_k`` ordering — the sharded scoring plane's exactness
+    argument (DESIGN.md §10) leans on this."""
+    bn = score_row.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    work = score_row
+    vals, idxs = [], []
+    for _ in range(k):
+        m = jnp.max(work)
+        idx = jnp.min(jnp.where(work == m, iota, jnp.int32(bn)))
+        vals.append(m)
+        idxs.append(jnp.minimum(idx, bn - 1))
+        work = jnp.where(iota == idx, NEG_LARGE, work)
+    return (jnp.stack(vals)[None, :],
+            (jnp.stack(idxs)[None, :] + block_base).astype(jnp.int32))
+
+
+def _ei_topk_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref,
+                    member_ref, out_ref, topv_ref, topi_ref, *, k: int):
+    """The EIrate kernel with a block-local top-k epilogue: alongside the
+    (n,) scores, each model block emits its k best (value, global index)
+    candidates, so a sharded caller reduces (num_blocks, k) candidates
+    instead of re-reading the whole score vector."""
+    _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref,
+               member_ref, out_ref)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bn = out_ref.shape[1]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _topk_epilogue():
+        vals, idxs = _block_topk(out_ref[0:1, :], k, i * bn)
+        topv_ref[0, :] = vals[0]
+        topi_ref[0, :] = idxs[0]
+
+
+def _pad_inputs(mu, sigma, best, membership, cost, selected, bn, bN):
+    n, N = mu.shape[0], best.shape[0]
+    pn = math.ceil(n / bn) * bn
+    pN = math.ceil(N / bN) * bN
+    f32 = jnp.float32
+    mu_p = jnp.zeros((1, pn), f32).at[0, :n].set(mu.astype(f32))
+    sg_p = jnp.zeros((1, pn), f32).at[0, :n].set(sigma.astype(f32))
+    cost_p = jnp.ones((1, pn), f32).at[0, :n].set(cost.astype(f32))
+    sel_p = jnp.ones((1, pn), f32).at[0, :n].set(selected.astype(f32))
+    best_p = jnp.zeros((pN, 1), f32).at[:N, 0].set(best.astype(f32))
+    mem_p = jnp.zeros((pN, pn), f32).at[:N, :n].set(membership.astype(f32))
+    return (mu_p, sg_p, cost_p, sel_p, best_p, mem_p), pn, pN
+
+
 @functools.partial(jax.jit, static_argnames=("block_models", "block_users", "interpret"))
 def eirate_pallas(
     mu: jax.Array,           # (n,)
@@ -90,16 +143,8 @@ def eirate_pallas(
     N = best.shape[0]
     bn = min(block_models, max(n, 1))
     bN = min(block_users, max(N, 1))
-    pn = math.ceil(n / bn) * bn
-    pN = math.ceil(N / bN) * bN
-
-    f32 = jnp.float32
-    mu_p = jnp.zeros((1, pn), f32).at[0, :n].set(mu.astype(f32))
-    sg_p = jnp.zeros((1, pn), f32).at[0, :n].set(sigma.astype(f32))
-    cost_p = jnp.ones((1, pn), f32).at[0, :n].set(cost.astype(f32))
-    sel_p = jnp.ones((1, pn), f32).at[0, :n].set(selected.astype(f32))
-    best_p = jnp.zeros((pN, 1), f32).at[:N, 0].set(best.astype(f32))
-    mem_p = jnp.zeros((pN, pn), f32).at[:N, :n].set(membership.astype(f32))
+    (mu_p, sg_p, cost_p, sel_p, best_p, mem_p), pn, pN = _pad_inputs(
+        mu, sigma, best, membership, cost, selected, bn, bN)
 
     grid = (pn // bn, pN // bN)
     out = pl.pallas_call(
@@ -114,9 +159,77 @@ def eirate_pallas(
             pl.BlockSpec((bN, bn), lambda i, j: (j, i)),
         ],
         out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, pn), f32),
+        out_shape=jax.ShapeDtypeStruct((1, pn), jnp.float32),
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(mu_p, sg_p, cost_p, sel_p, best_p, mem_p)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "block_models", "block_users", "interpret"))
+def eirate_topk_pallas(
+    mu: jax.Array,           # (n,)
+    sigma: jax.Array,        # (n,)
+    best: jax.Array,         # (N,)
+    membership: jax.Array,   # (N, n) bool/float
+    cost: jax.Array,         # (n,)
+    selected: jax.Array,     # (n,) bool
+    *,
+    k: int = 4,
+    block_models: int = 256,
+    block_users: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """EIrate scoring with the block-local top-k epilogue: returns the
+    global top-k as ``(values (k,), indices (k,))``, ties broken by lowest
+    index (exactly ``jax.lax.top_k`` over the full score vector).  Each
+    model block emits its k best candidates in VMEM; the host-side reduce
+    touches only (num_blocks, k) — the shape the sharded scoring plane
+    all-gathers (DESIGN.md §10)."""
+    n = mu.shape[0]
+    N = best.shape[0]
+    bn = min(block_models, max(n, 1))
+    bN = min(block_users, max(N, 1))
+    kb = min(k, bn)          # a block cannot yield more candidates than bn
+    (mu_p, sg_p, cost_p, sel_p, best_p, mem_p), pn, pN = _pad_inputs(
+        mu, sigma, best, membership, cost, selected, bn, bN)
+
+    grid = (pn // bn, pN // bN)
+    _, topv, topi = pl.pallas_call(
+        functools.partial(_ei_topk_kernel, k=kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((bN, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bN, bn), lambda i, j: (j, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, kb), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, pn), jnp.float32),
+            jax.ShapeDtypeStruct((pn // bn, kb), jnp.float32),
+            jax.ShapeDtypeStruct((pn // bn, kb), jnp.int32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(mu_p, sg_p, cost_p, sel_p, best_p, mem_p)
+
+    flatv = topv.reshape(-1)
+    flati = topi.reshape(-1)
+    # candidates in padding columns are inert; keep shape >= k regardless
+    flatv = jnp.where(flati < n, flatv, NEG_LARGE)
+    if flatv.shape[0] < k:
+        pad = k - flatv.shape[0]
+        flatv = jnp.concatenate([flatv, jnp.full(pad, NEG_LARGE, jnp.float32)])
+        flati = jnp.concatenate([flati, jnp.zeros(pad, jnp.int32)])
+    v, pos = jax.lax.top_k(flatv, k)
+    return v, flati[pos]

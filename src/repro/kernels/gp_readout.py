@@ -30,7 +30,7 @@ _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPa
 
 
 def _readout_kernel(W_ref, alpha_ref, mu0_ref, kdiag_ref, mu_out, var_out,
-                    acc_dot, acc_sq):
+                    acc_dot, acc_sq, *, emit_sd: bool = False):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -47,10 +47,14 @@ def _readout_kernel(W_ref, alpha_ref, mu0_ref, kdiag_ref, mu_out, var_out,
     @pl.when(j == pl.num_programs(1) - 1)
     def _epilogue():
         mu_out[...] = mu0_ref[...] + acc_dot[...]
-        var_out[...] = jnp.maximum(kdiag_ref[...] - acc_sq[...], 0.0)
+        var = jnp.maximum(kdiag_ref[...] - acc_sq[...], 0.0)
+        # emit_sd: the EIrate consumer wants sigma, not variance — the sqrt
+        # rides the epilogue instead of costing a second (n,) pass
+        var_out[...] = jnp.sqrt(var) if emit_sd else var
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret",
+                                             "emit_sd"))
 def gp_readout_pallas(
     W: jax.Array,         # (k, n)
     alpha: jax.Array,     # (k,)
@@ -60,8 +64,11 @@ def gp_readout_pallas(
     block_n: int = 512,
     block_k: int = 512,
     interpret: bool = True,
+    emit_sd: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (mu_post (n,), var_post (n,))."""
+    """Returns (mu_post (n,), var_post (n,)) — or (mu_post, sd_post) with
+    ``emit_sd`` (the fused readout->EIrate pipeline of the sharded scoring
+    plane consumes sigma directly)."""
     k, n = W.shape
     bn = min(block_n, max(n, 1))
     bk = min(block_k, max(k, 1))
@@ -76,7 +83,7 @@ def gp_readout_pallas(
 
     grid = (pn // bn, pk // bk)
     mu_out, var_out = pl.pallas_call(
-        _readout_kernel,
+        functools.partial(_readout_kernel, emit_sd=emit_sd),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, bn), lambda i, j: (j, i)),

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .ei_score import eirate_pallas
+from .ei_score import eirate_pallas, eirate_topk_pallas
 from .flash_attention import flash_attention_pallas
 from .gp_readout import gp_readout_pallas
 from .ssd import ssd_pallas
@@ -30,11 +30,26 @@ def eirate(mu, sigma, best, membership, cost, selected, *, use_pallas=True,
     return eirate_pallas(mu, sigma, best, membership, cost, selected, **kw)
 
 
-def gp_readout(W, alpha, mu0, k_diag, *, use_pallas=True, **kw):
+def eirate_topk(mu, sigma, best, membership, cost, selected, *, k=4,
+                use_pallas=True, **kw):
+    """Global EIrate top-k as (values (k,), indices (k,)), lowest-index
+    tie-break — the kernel path uses the block-local top-k epilogue so only
+    (num_blocks, k) candidates leave VMEM."""
     if not use_pallas:
-        return ref.gp_readout_ref(W, alpha, mu0, k_diag)
+        return ref.eirate_topk_ref(mu, sigma, best, membership, cost,
+                                   selected, k=k)
     kw.setdefault("interpret", _interpret_default())
-    return gp_readout_pallas(W, alpha, mu0, k_diag, **kw)
+    return eirate_topk_pallas(mu, sigma, best, membership, cost, selected,
+                              k=k, **kw)
+
+
+def gp_readout(W, alpha, mu0, k_diag, *, use_pallas=True, emit_sd=False, **kw):
+    if not use_pallas:
+        import jax.numpy as jnp
+        mu, var = ref.gp_readout_ref(W, alpha, mu0, k_diag)
+        return (mu, jnp.sqrt(var)) if emit_sd else (mu, var)
+    kw.setdefault("interpret", _interpret_default())
+    return gp_readout_pallas(W, alpha, mu0, k_diag, emit_sd=emit_sd, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, use_pallas=True, **kw):

@@ -29,6 +29,17 @@ def eirate_ref(mu, sigma, best, membership, cost, selected) -> jax.Array:
     return jnp.where(selected.astype(bool), -1e30, total / cost.astype(jnp.float32))
 
 
+def eirate_topk_ref(mu, sigma, best, membership, cost, selected, *, k=4):
+    """(values (k,), indices (k,)) of the EIrate top-k; short vectors pad
+    with -1e30 so the shape is k regardless of n."""
+    scores = eirate_ref(mu, sigma, best, membership, cost, selected)
+    if scores.shape[0] < k:
+        pad = k - scores.shape[0]
+        scores = jnp.concatenate([scores, jnp.full(pad, -1e30, scores.dtype)])
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)
+
+
 # --- GP posterior readout ---------------------------------------------------
 
 def gp_readout_ref(W, alpha, mu0, k_diag):

@@ -15,19 +15,53 @@ it is handed.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+import numpy as np
+
+try:  # AxisType landed after jax 0.4.x; meshes default to Auto without it
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Version-portable ``with mesh:`` — ``jax.sharding.set_mesh`` where it
+    exists, the Mesh context manager on older releases."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def make_scoring_mesh(num_shards: int | None = None):
+    """1-D ("shard",) mesh for the sharded GP-EI scoring plane
+    (repro.shardgp): the model axis of the control-plane state is
+    partitioned over these devices.  Defaults to every visible device; the
+    control plane's decision path is exact for any extent (DESIGN.md §10),
+    so shrinking the mesh is a capacity knob, not a correctness one."""
+    devices = jax.devices()
+    n = len(devices) if num_shards is None else num_shards
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"num_shards must be in [1, {len(devices)}], got {n}")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]), ("shard",))

@@ -1,0 +1,19 @@
+"""Sharded scoring plane: multi-device GP-EI decisions + index-space
+compaction for long-running services (DESIGN.md §10).
+
+  layout.py   RangeAllocator (slot reuse — ends §9's append-only index
+              space) + ShardLayout (shard-span-confined block placement)
+  score.py    ShardedScorer: the shard_map decision program — per-shard
+              GP readout / EIrate / top-k, one cross-shard reduction to
+              the exact global argmax
+  compact.py  rebalance planner: relocate idle tenant blocks until shard
+              loads sit within a bound
+
+The control plane integrates all three behind ``scorer="sharded"``
+(``repro.core.control_plane``); ``benchmarks/shard_scale.py`` sweeps the
+decision latency over |L| x mesh size.
+"""
+
+from .compact import DEFAULT_MAX_IMBALANCE, plan_moves  # noqa: F401
+from .layout import BlockPlacement, RangeAllocator, ShardLayout  # noqa: F401
+from .score import SCORE_KERNELS, ShardedScorer  # noqa: F401

@@ -1,0 +1,239 @@
+"""The sharded scoring plane: multi-device GP-EI decisions via shard_map.
+
+One decision = GP posterior readout + batched EIrate over every live model +
+argmax over the unselected pool.  Single-device, that whole pass competes
+with the fleet for one chip; here the *model axis* is partitioned over a
+1-D ``("shard",)`` mesh (``repro.launch.mesh.make_scoring_mesh``) and the
+decision runs as one ``shard_map`` program:
+
+  1. each shard scores its local slice of the pool — the same math as
+     ``ei.choose_next_fused`` (XLA path) or the Pallas kernels
+     (``kernels/ops.eirate_topk`` with the block-local top-k epilogue);
+  2. each shard reduces its slice to a local top-k (values + global ids);
+  3. one small ``all_gather`` of the S*k candidates, then a replicated
+     global pick — max value, ties broken by *lowest global id*.
+
+Exactness (DESIGN.md §10): the per-model scores are elementwise in the model
+axis, so sharding changes no value; ``lax.top_k`` prefers lower indices on
+equal values, and the gathered candidate list is ordered (shard, rank) which
+is ascending in global id — so the global pick is bit-identical to
+``jnp.argmax`` over the unsharded score vector, including tie-breaking.
+The layout half of the contract (both scorers seeing the same index space)
+lives in layout.py.
+
+Per-shard state (membership columns, costs) is device-resident and refreshed
+only on churn; per-decision inputs (mu, sd, best, selected) stream in each
+call.  Shapes are capacity-padded (padding is born selected), so the jitted
+program recompiles only when capacity doubles.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.ei import NEG_INF, ei_total
+from repro.sharding.rules import SCORING_RULES
+
+# shard_map moved from jax.experimental to the jax namespace (and its
+# replication-check kwarg was renamed) across releases; resolve both here so
+# the pinned container jax and current releases run the same code.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+_SM_PARAMS = inspect.signature(shard_map).parameters
+if "check_rep" in _SM_PARAMS:
+    _NO_REP_CHECK = {"check_rep": False}
+elif "check_vma" in _SM_PARAMS:  # pragma: no cover
+    _NO_REP_CHECK = {"check_vma": False}
+else:  # pragma: no cover
+    _NO_REP_CHECK = {}
+
+SCORE_KERNELS = ("xla", "pallas", "pallas_topk")
+
+# PartitionSpecs derived from the logical-axis table (sharding/rules.py),
+# not hard-coded mesh axes — the same knob the data plane turns.
+P_MODELS = SCORING_RULES.mesh_axes(("models",))
+P_TENANTS = SCORING_RULES.mesh_axes(("tenants",))
+P_MEMBER = SCORING_RULES.mesh_axes(("tenants", "models"))
+P_W = SCORING_RULES.mesh_axes(("obs", "models"))
+P_OBS = SCORING_RULES.mesh_axes(("obs",))
+
+
+def _global_pick(allv: jax.Array, allg: jax.Array, k: int):
+    """Top-k of the gathered (S*k,) candidates.  The flat order is
+    (shard, rank)-major = ascending global id at equal value, and lax.top_k
+    keeps the earlier element on ties, so ties resolve to the lowest global
+    id — identical to single-device argmax."""
+    v, pos = jax.lax.top_k(allv, k)
+    return v, allg[pos]
+
+
+def _local_topk(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    # a shard's slice can be smaller than k (tiny pool, many shards):
+    # lax.top_k demands k <= dimension, so clamp and pad with inert
+    # candidates — same convention as the Pallas epilogue's kb guard
+    kk = min(k, scores.shape[0])
+    v, li = jax.lax.top_k(scores, kk)
+    base = jax.lax.axis_index("shard") * scores.shape[0]
+    g = base + li.astype(jnp.int32)
+    if kk < k:
+        v = jnp.concatenate([v, jnp.full(k - kk, NEG_INF, v.dtype)])
+        g = jnp.concatenate([g, jnp.zeros(k - kk, jnp.int32)])
+    return v, g
+
+
+def _score_local(mu, sd, best, member, cost, selected, speed, kernel: str, k: int):
+    """One shard's slice -> (k,) local best values + global ids."""
+    cost = cost / speed
+    if kernel == "xla":
+        # bit-identical to ei.choose_next_fused on the full vector
+        total = ei_total(mu, sd, best, member)
+        scores = jnp.where(selected, NEG_INF, total / cost)
+        return _local_topk(scores, k)
+    from repro.kernels import ops
+    if kernel == "pallas_topk":
+        v, li = ops.eirate_topk(mu, sd, best, member, cost, selected, k=k)
+        base = jax.lax.axis_index("shard") * mu.shape[0]
+        return v, base + li.astype(jnp.int32)
+    scores = ops.eirate(mu, sd, best, member, cost, selected)
+    return _local_topk(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
+def _decide(mu, sd, best, member, cost, selected, speed, *, mesh, kernel, k):
+    def local(mu, sd, best, member, cost, selected, speed):
+        v, g = _score_local(mu, sd, best, member, cost, selected, speed,
+                            kernel, k)
+        allv = jax.lax.all_gather(v, "shard").reshape(-1)
+        allg = jax.lax.all_gather(g, "shard").reshape(-1)
+        return allv, allg
+    allv, allg = shard_map(
+        local, mesh=mesh,
+        in_specs=(P_MODELS, P_MODELS, P_TENANTS, P_MEMBER,
+                  P_MODELS, P_MODELS, P()),
+        out_specs=(P(None), P(None)),
+        **_NO_REP_CHECK,
+    )(mu, sd, best, member, cost, selected, speed)
+    return _global_pick(allv, allg, k)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
+def _readout_decide(W, alpha, mu0, kdiag, best, member, cost, selected, speed,
+                    *, mesh, kernel, k):
+    """The fully fused pipeline: sharded GP readout -> EIrate -> global
+    argmax in one program.  W is (k_obs, n) sharded over columns; each shard
+    reads its slice of W exactly once (kernels/gp_readout streaming pass)."""
+    use_pallas = kernel != "xla"
+
+    def local(W, alpha, mu0, kdiag, best, member, cost, selected, speed):
+        from repro.kernels import ops
+        mu, sd = ops.gp_readout(W, alpha, mu0, kdiag, emit_sd=True,
+                                use_pallas=use_pallas)
+        v, g = _score_local(mu, sd, best, member, cost, selected, speed,
+                            kernel, k)
+        allv = jax.lax.all_gather(v, "shard").reshape(-1)
+        allg = jax.lax.all_gather(g, "shard").reshape(-1)
+        return allv, allg
+
+    allv, allg = shard_map(
+        local, mesh=mesh,
+        in_specs=(P_W, P_OBS, P_MODELS, P_MODELS, P_TENANTS,
+                  P_MEMBER, P_MODELS, P_MODELS, P()),
+        out_specs=(P(None), P(None)),
+        **_NO_REP_CHECK,
+    )(W, alpha, mu0, kdiag, best, member, cost, selected, speed)
+    return _global_pick(allv, allg, k)
+
+
+class ShardedScorer:
+    """Device-resident sharded mirrors + the decision entry points.
+
+    ``num_shards`` must not exceed the jax device count; with one shard the
+    program is the single-device fused path plus a trivial reduction (used
+    by the tier-1 tests — the multi-shard path needs forced host devices).
+    """
+
+    def __init__(self, num_shards: int | None = None, *, topk: int = 4,
+                 kernel: str = "xla", mesh=None):
+        from repro.launch.mesh import make_scoring_mesh
+        if kernel not in SCORE_KERNELS:
+            raise ValueError(
+                f"kernel must be one of {SCORE_KERNELS}, got {kernel!r}")
+        if mesh is None:
+            mesh = make_scoring_mesh(num_shards)
+        self.mesh = mesh
+        self.num_shards = mesh.devices.size
+        self.topk = max(1, topk)
+        self.kernel = kernel
+        self._member = None     # (N_cap, cap) device-resident, P(None, shard)
+        self._cost = None       # (cap,) device-resident, P(shard)
+        self._cap = 0
+
+    # ---- sharded mirrors ---------------------------------------------------
+
+    def _padded_cap(self, n: int) -> int:
+        s = self.num_shards
+        return ((n + s - 1) // s) * s
+
+    def refresh(self, membership: np.ndarray, cost: np.ndarray) -> None:
+        """Full host->device refresh of the churn-rate state (membership
+        columns + costs), capacity-padded to a shard multiple."""
+        n = cost.shape[0]
+        cap = self._padded_cap(n)
+        mem = np.zeros((membership.shape[0], cap), dtype=bool)
+        mem[:, :n] = membership
+        c = np.ones(cap, dtype=np.float32)
+        c[:n] = cost
+        self._member = jax.device_put(
+            mem, NamedSharding(self.mesh, P_MEMBER))
+        self._cost = jax.device_put(
+            c, NamedSharding(self.mesh, P_MODELS))
+        self._cap = cap
+
+    def _pad(self, x, fill, dtype):
+        x = np.asarray(x)
+        if x.shape[0] == self._cap:
+            return x.astype(dtype, copy=False)
+        out = np.full(self._cap, fill, dtype=dtype)
+        out[:x.shape[0]] = x
+        return out
+
+    # ---- decisions ---------------------------------------------------------
+
+    def decide_topk(self, mu, sd, best, selected, speed: float = 1.0):
+        """(values (k,), global ids (k,)) of the global EIrate top-k."""
+        if self._member is None:
+            raise RuntimeError("refresh() must run before decide()")
+        mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
+        sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
+        sel = self._pad(np.asarray(selected), True, bool)
+        return _decide(
+            mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
+            self._cost, sel, jnp.float32(speed),
+            mesh=self.mesh, kernel=self.kernel, k=self.topk)
+
+    def decide(self, mu, sd, best, selected,
+               speed: float = 1.0) -> tuple[int, float]:
+        """The decision the control plane consumes: global argmax (lowest-id
+        tie-break) and its score."""
+        v, g = self.decide_topk(mu, sd, best, selected, speed)
+        return int(g[0]), float(v[0])
+
+    def readout_decide_topk(self, W, alpha, mu0, kdiag, best, selected,
+                            speed: float = 1.0):
+        """Fused readout+score+pick over an explicit (k_obs, n) W buffer —
+        the shard_scale benchmark's full-pipeline path.  Shapes must already
+        be shard-multiples (pad upstream)."""
+        if self._member is None:
+            raise RuntimeError("refresh() must run before decide()")
+        return _readout_decide(
+            W, alpha, mu0, kdiag, jnp.asarray(best, dtype=jnp.float32),
+            self._member, self._cost, jnp.asarray(selected),
+            jnp.float32(speed), mesh=self.mesh, kernel=self.kernel,
+            k=self.topk)

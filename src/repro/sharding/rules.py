@@ -125,6 +125,17 @@ PUREDP_RULES = AxisRules((
 # of heads.  Params stay TP-sharded where divisible.
 QROWS_RULES = DEFAULT_RULES.override(q_rows="model", act_heads=None)
 
+# Sharded GP-EI scoring plane (repro.shardgp, DESIGN.md §10): control-plane
+# state is logically (tenants, models) / (obs, models); only the model axis
+# shards — tenants ride along replicated (N ~ 10^2-10^3 is small next to
+# |L| ~ 10^5-10^6) and the observation axis of the W readout buffer stays
+# local so the streamed readout needs no cross-shard reduction.
+SCORING_RULES = AxisRules((
+    ("models", "shard"),
+    ("tenants", None),
+    ("obs", None),
+))
+
 
 @dataclass(frozen=True)
 class ParamSpec:
@@ -198,6 +209,19 @@ def shape_dtype_for_tree(tree):
     )
 
 
+def _current_mesh():
+    """The ambient mesh, across jax versions: ``get_abstract_mesh`` where it
+    exists, the thread-resource physical mesh (the ``with mesh:`` context)
+    on older releases.  None when no mesh is active."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        mesh = get_abstract()
+        return None if mesh is None or mesh.empty else mesh
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
 def with_logical_constraint(x, logical_axes: tuple[str | None, ...], rules: AxisRules | None):
     """Annotate an activation with a logical sharding constraint.
 
@@ -206,8 +230,8 @@ def with_logical_constraint(x, logical_axes: tuple[str | None, ...], rules: Axis
     """
     if rules is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = _current_mesh()
+    if mesh is None:
         return x
     spec = rules.mesh_axes(logical_axes)
     spec = _sanitize_pspec(spec, x.shape, mesh)

@@ -13,7 +13,9 @@ utilization, admission-queue depth, time-to-first-observation percentiles
 The per-event math is the same ``core.control_plane.ControlPlane`` the
 offline simulators use; with churn disabled the engine reproduces
 ``scheduler.simulate``'s trial sequence exactly (tests/test_stream.py).
-See DESIGN.md §9.
+Long-running services recycle model/tenant slots and can run the scoring
+pass across a device mesh (``scorer="sharded"``, ``repro.shardgp``) with an
+identical decision sequence (tests/test_shardgp.py).  See DESIGN.md §9–§10.
 """
 
 from .engine import StreamEngine, StreamResult, StreamTrial  # noqa: F401

@@ -21,6 +21,16 @@ sizes over admitted, non-departed tenants): a tenant whose block would
 exceed the cap waits in a FIFO queue and is admitted as departures free
 capacity — queue depth is a telemetry series.
 
+Index space under churn (DESIGN.md §10): the ControlPlane recycles model
+and tenant slots, so a reused global model id can refer to a *new* tenant's
+model while an old tenant's trial is still in flight — every completion /
+failure therefore resolves its owner through the trial's ``tenant_key``
+(stable forever), never through the model id.  With ``compact_every`` set,
+the engine periodically asks the control plane to rebalance idle tenant
+blocks across shard spans and remaps its own launch queue and ownership
+maps from the returned old->new id mapping (in-flight models are pinned, so
+pending completion events never go stale).
+
 Equivalence contract (tested): replaying
 :func:`~repro.stream.workload.trace_from_problem` (all tenants at t=0, no
 departures, no failures, no cap) reproduces ``scheduler.simulate``'s trial
@@ -83,6 +93,7 @@ class StreamResult:
     decision_seconds: float
     telemetry: TelemetrySink
     tenants: dict[int, _TenantRuntime] = field(repr=False, default_factory=dict)
+    compaction_moves: int = 0   # tenant blocks relocated by compact() passes
 
     @property
     def observations(self) -> list[tuple[float, int, float]]:
@@ -104,6 +115,10 @@ class StreamEngine:
         max_live_models: int | None = None,
         seed: int = 0,
         scorer: str = "fused",
+        num_shards: int | None = None,
+        score_kernel: str = "xla",
+        compact_every: int | None = None,
+        compact_imbalance: float | None = None,
         telemetry: TelemetrySink | None = None,
     ):
         if policy not in POLICIES:
@@ -112,8 +127,12 @@ class StreamEngine:
         self.policy = policy
         self.warm_start = warm_start
         self.max_live_models = max_live_models
+        self.compact_every = compact_every
+        self.compact_imbalance = compact_imbalance
         self.telemetry = telemetry or TelemetrySink()
-        self.cp = ControlPlane(np.random.default_rng(seed), scorer=scorer)
+        self.cp = ControlPlane(np.random.default_rng(seed), scorer=scorer,
+                               num_shards=num_shards,
+                               score_kernel=score_kernel)
         self._chooser = self.cp.chooser(policy)
 
         # mirrors scheduler.simulate's free-device stack: initial pop order is
@@ -121,9 +140,12 @@ class StreamEngine:
         self._free: list[int] = [s.slice_id for s in fleet.slices if s.healthy]
         self._heap: list[tuple[float, int, str, tuple]] = []
         self._seq = 0
-        self._pending: list[int] = []          # warm-start launch queue
+        # warm-start launch queue: (tenant_key, global model id) — keyed so a
+        # stale entry whose slot was recycled is detected and skipped
+        self._pending: list[tuple[int, int]] = []
         self._admission_queue: list[_TenantRuntime] = []
         self._live_models = 0
+        self._departures = 0
         self._tenants: dict[int, _TenantRuntime] = {}
         self._owner_of_model: dict[int, _TenantRuntime] = {}
         self._trials: list[StreamTrial] = []
@@ -131,6 +153,7 @@ class StreamEngine:
         self._t = 0.0
         self._decisions = 0
         self._decision_seconds = 0.0
+        self._compaction_moves = 0
 
     # ---- event plumbing ----------------------------------------------------
 
@@ -154,7 +177,7 @@ class StreamEngine:
         for g in handle.models:
             self._owner_of_model[int(g)] = tr
         self._pending.extend(
-            tr.model_start + li
+            (tr.key, tr.model_start + li)
             for li in tenant_warm_models(ev.cost, ev.mu0, self.warm_start))
         self.telemetry.on_admit(self._t, tr.key)
 
@@ -185,7 +208,9 @@ class StreamEngine:
         self.telemetry.on_depart(self._t, key)
         if tr.tenant_id is None:
             # never admitted: drop it from the waiting line — whoever was
-            # stuck behind it may fit now (FIFO head-of-line blocking)
+            # stuck behind it may fit now (FIFO head-of-line blocking).  No
+            # runtime exists: nothing to retire, no live-model capacity to
+            # return, no pending/ownership entries to clean.
             self._admission_queue = [q for q in self._admission_queue
                                      if q.key != key]
             self.telemetry.on_queue_depth(self._t, len(self._admission_queue))
@@ -193,18 +218,49 @@ class StreamEngine:
             return
         self.cp.retire_tenant(tr.tenant_id)
         self._live_models -= tr.arrive.num_models
+        self._departures += 1
+        for g in range(tr.model_start, tr.model_start + tr.arrive.num_models):
+            if self._owner_of_model.get(g) is tr:
+                del self._owner_of_model[g]
         self._drain_admission_queue()
+        if self.compact_every and self._departures % self.compact_every == 0:
+            self._run_compaction()
+
+    def _run_compaction(self) -> None:
+        """Rebalance idle tenant blocks across shard spans and remap every
+        engine-side structure that holds global model ids."""
+        remap = self.cp.compact(self.compact_imbalance)
+        if not remap:
+            return
+        by_tid = {tr.tenant_id: tr for tr in self._tenants.values()
+                  if tr.tenant_id is not None and not tr.departed}
+        gid_map: dict[int, int] = {}
+        for tid, (old_ids, new_ids) in remap.items():
+            tr = by_tid[tid]
+            tr.model_start = int(new_ids[0])
+            for og, ng in zip(old_ids.tolist(), new_ids.tolist()):
+                gid_map[og] = ng
+            for og in old_ids.tolist():
+                if self._owner_of_model.get(og) is tr:
+                    del self._owner_of_model[og]
+            for ng in new_ids.tolist():
+                self._owner_of_model[ng] = tr
+            self._compaction_moves += 1
+        self._pending = [(key, gid_map.get(g, g)) for key, g in self._pending]
 
     def _handle_finish(self, device: int, model: int, ti: int) -> None:
         if ti in self._cancelled:
             return
-        tr = self._owner_of_model[model]
         t = self._trials[ti]
+        # resolve the owner by tenant key, NOT by model id: with slot reuse
+        # the id may already belong to a newly admitted tenant while this
+        # departed tenant's trial was still in flight
+        tr = self._tenants[t.tenant_key]
         if tr.departed:
             self.telemetry.on_rejected_observation(
                 self._t, tr.key, t.end - t.start)
         else:
-            z = float(tr.arrive.z_true[model - tr.model_start])
+            z = float(tr.arrive.z_true[t.local_model])
             self._trials[ti] = StreamTrial(
                 t.model, t.tenant_key, t.local_model, t.user_hint,
                 t.device, t.start, t.end, z)
@@ -225,7 +281,7 @@ class StreamEngine:
             self._trials[killed_ti] = StreamTrial(
                 t.model, t.tenant_key, t.local_model, t.user_hint,
                 t.device, t.start, self._t, None)
-            owner = self._owner_of_model[t.model]
+            owner = self._tenants[t.tenant_key]
             if not owner.departed:
                 # never observed => the model returns to L \ L(t)
                 self.cp.record_failure(t.model)
@@ -250,9 +306,12 @@ class StreamEngine:
             d = self._free[-1]
             s = self.fleet.slices[d]
             if self._pending:
-                model, hint = self._pending.pop(0), -2
+                (key, model), hint = self._pending.pop(0), -2
+                owner = self._tenants[key]
+                if owner.departed or self._owner_of_model.get(model) is not owner:
+                    continue             # tenant left / slot recycled meanwhile
                 if self.cp.selected[model]:
-                    continue             # observed/in-flight/retired meanwhile
+                    continue             # observed or in flight meanwhile
             else:
                 t0 = _time.perf_counter()
                 pick = self._chooser(device_speed=s.speed)
@@ -321,4 +380,5 @@ class StreamEngine:
             num_devices=self.fleet.num_devices, trials=self._trials,
             end_time=self._t, decisions=self._decisions,
             decision_seconds=self._decision_seconds,
-            telemetry=self.telemetry, tenants=self._tenants)
+            telemetry=self.telemetry, tenants=self._tenants,
+            compaction_moves=self._compaction_moves)

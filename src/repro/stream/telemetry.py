@@ -115,12 +115,15 @@ class TelemetrySink:
         regrets = [st.best_possible - st.best_z for st in served
                    if np.isfinite(st.best_possible)]
         admitted = [st for st in self.tenants.values() if st.admitted is not None]
+        left_queued = [st for st in self.tenants.values()
+                       if st.departed is not None and st.admitted is None]
         queue_max = max((d for _, d in self.queue_depth_samples), default=0)
         elapsed = max(self.end_time, 1e-12)
         return {
             "sessions": len(self.tenants),
             "sessions_admitted": len(admitted),
             "sessions_served": len(served),
+            "sessions_departed_while_queued": len(left_queued),
             "trials": self.num_trials,
             "trials_failed": self.num_failed_trials,
             "observations_rejected_after_depart": self.num_rejected_observations,

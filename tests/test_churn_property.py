@@ -1,0 +1,38 @@
+"""Property test: churn round-trips leave survivors' posteriors intact.
+
+Interleaved ``add_block`` / ``retire_block`` / slot-reuse sequences on a
+dynamic ControlPlane (which recycles model and tenant slots through the
+shardgp allocator, DESIGN.md §10) must leave every surviving tenant's
+posterior equal — to float32 tolerance — to a fresh ``BlockIncrementalGP``
+built from only the survivors with only their observations.  Sequences also
+exercise ``compact()`` mid-stream, so block relocation is covered by the
+same invariant.
+
+The harness (churn_round_trip / assert_survivors_match_fresh) and a
+deterministic seeded variant live in tests/test_gp_churn.py — this file
+skips entirely without hypothesis, matching the repo's import-guard
+convention.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from test_gp_churn import assert_survivors_match_fresh, churn_round_trip
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["add", "retire", "observe", "observe",
+                             "observe"]),
+            st.integers(0, 10 ** 6),
+            st.integers(0, 10 ** 6)),
+        min_size=4, max_size=30),
+    compact_at=st.frozensets(st.integers(0, 29), max_size=3),
+)
+def test_interleaved_churn_preserves_survivor_posteriors(ops, compact_at):
+    cp, live = churn_round_trip(ops, compact_at)
+    assert_survivors_match_fresh(cp, live)

@@ -7,9 +7,75 @@ Separate from test_gp.py because these tests have no hypothesis dependency
 import numpy as np
 import pytest
 
+from repro.core import ControlPlane
 from repro.core.gp import BlockIncrementalGP, IncrementalGP
+from repro.core.tenancy import _matern_block_chol
 
 from conftest import random_psd
+
+
+def churn_round_trip(ops: list[tuple], compact_at: frozenset[int]):
+    """Drive one interleaved add/retire/observe sequence (with slot reuse
+    and optional compaction passes) on a dynamic ControlPlane.  Returns
+    (cp, survivors) where survivors maps tenant_id -> (K, mu0,
+    [(local, z), ...]).  Shared with the hypothesis property in
+    test_churn_property.py."""
+    K_cache: dict[int, np.ndarray] = {}
+    cp = ControlPlane(np.random.default_rng(0), model_capacity=8,
+                      tenant_capacity=2, num_shards=2)
+    live: dict[int, tuple] = {}   # tid -> (K, mu0, obs list)
+    z_rng = np.random.default_rng(1234)
+    for step, (kind, a, b) in enumerate(ops):
+        if kind == "add":
+            m = 2 + a % 5
+            if m not in K_cache:
+                K_cache[m] = _matern_block_chol(m, 0.2, 0.04)[0]
+            mu0 = np.full(m, (b % 7) / 10.0)
+            h = cp.add_tenant(K_cache[m], mu0, np.ones(m))
+            live[h.tenant_id] = (K_cache[m], mu0, [])
+        elif kind == "retire" and live:
+            tid = sorted(live)[a % len(live)]
+            cp.retire_tenant(tid)
+            del live[tid]
+        elif kind == "observe" and live:
+            tid = sorted(live)[a % len(live)]
+            ids = np.nonzero(cp.membership[tid])[0]
+            unobserved = [g for g in ids if not cp.observed[g]]
+            if not unobserved:
+                continue
+            g = int(unobserved[b % len(unobserved)])
+            z = float(z_rng.uniform(0.0, 1.0))
+            cp.record_start(g)
+            cp.record_observation(g, z)
+            live[tid][2].append((int(g - ids[0]), z))
+        if step in compact_at:
+            cp.compact(1.0)
+    return cp, live
+
+
+def assert_survivors_match_fresh(cp: ControlPlane, live: dict) -> None:
+    """Survivors' posteriors == a fresh BlockIncrementalGP built from only
+    the survivors, float32 tolerance."""
+    mu_now, var_now = map(np.asarray, cp.gp.posterior())
+    fresh = BlockIncrementalGP.empty()
+    placements = {}
+    cursor = 0
+    for tid in sorted(live):
+        K, mu0, obs = live[tid]
+        m = len(mu0)
+        ids = np.arange(cursor, cursor + m)
+        fresh.add_block(ids, K, mu0)
+        placements[tid] = ids
+        cursor += m
+        for local, z in obs:
+            fresh.observe(int(ids[0] + local), z)
+    mu_ref, var_ref = map(np.asarray, fresh.posterior())
+    for tid, fresh_ids in placements.items():
+        now_ids = np.nonzero(cp.membership[tid])[0]
+        np.testing.assert_allclose(
+            mu_now[now_ids], mu_ref[fresh_ids], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            var_now[now_ids], var_ref[fresh_ids], rtol=1e-5, atol=1e-6)
 
 
 def test_add_block_matches_static_construction(rng):
@@ -94,3 +160,73 @@ def test_duplicate_indices_rejected(rng):
     dyn.add_block(np.arange(0, 3), random_psd(rng, 3), np.zeros(3))
     with pytest.raises(AssertionError):
         dyn.add_block(np.arange(2, 5), random_psd(rng, 3), np.zeros(3))
+
+
+def test_slot_reuse_at_retired_indices(rng):
+    """Index recycling (DESIGN.md §10): a new block may land on a retired
+    block's indices, and behaves exactly like a fresh engine there."""
+    dyn = BlockIncrementalGP.empty()
+    b0 = dyn.add_block(np.arange(0, 3), random_psd(rng, 3), np.zeros(3))
+    dyn.observe(1, 0.4)
+    dyn.retire_block(b0)
+    Kb = random_psd(rng, 3)
+    dyn.add_block(np.arange(0, 3), Kb, np.ones(3))   # same global ids
+    dyn.observe(1, 0.9)
+    ref = IncrementalGP(Kb, np.ones(3))
+    ref.observe(1, 0.9)
+    mu, var = map(np.asarray, dyn.posterior())
+    mu_r, var_r = map(np.asarray, ref.posterior())
+    np.testing.assert_array_equal(mu[:3], mu_r)
+    np.testing.assert_array_equal(var[:3], var_r)
+
+
+def test_relocate_block_moves_posterior_and_remaps_observations(rng):
+    dyn = BlockIncrementalGP.empty()
+    Kb = random_psd(rng, 3)
+    bid = dyn.add_block(np.arange(0, 3), Kb, np.zeros(3))
+    other = dyn.add_block(np.arange(3, 6), random_psd(rng, 3), np.zeros(3))
+    dyn.observe(0, 0.7)
+    dyn.observe(4, 0.2)
+    mu_b, var_b = map(np.asarray, dyn.posterior())
+    dyn.relocate_block(bid, np.arange(8, 11))
+    mu_a, var_a = map(np.asarray, dyn.posterior())
+    np.testing.assert_array_equal(mu_a[8:11], mu_b[0:3])
+    np.testing.assert_array_equal(var_a[8:11], var_b[0:3])
+    np.testing.assert_array_equal(mu_a[3:6], mu_b[3:6])   # untouched block
+    # vacated entries are inert padding
+    assert (mu_a[0:3] == 0).all() and (var_a[0:3] == 0).all()
+    # observations continue at the new indices; old ones are dead
+    dyn.observe(9, 0.5)
+    with pytest.raises(KeyError):
+        dyn.observe(1, 0.5)
+    ref = IncrementalGP(Kb, np.zeros(3))
+    ref.observe(0, 0.7)
+    ref.observe(1, 0.5)
+    mu_ref = np.asarray(ref.posterior()[0])
+    np.testing.assert_array_equal(np.asarray(dyn.posterior()[0])[8:11], mu_ref)
+
+
+def test_relocate_block_clash_rejected(rng):
+    dyn = BlockIncrementalGP.empty()
+    bid = dyn.add_block(np.arange(0, 3), random_psd(rng, 3), np.zeros(3))
+    dyn.add_block(np.arange(3, 6), random_psd(rng, 3), np.zeros(3))
+    with pytest.raises(AssertionError):
+        dyn.relocate_block(bid, np.arange(4, 7))
+
+
+def test_deterministic_churn_round_trip_matches_fresh_engine(rng):
+    """Seeded variant of the hypothesis property in test_churn_property.py
+    (which skips without hypothesis): interleaved add/retire/observe with
+    slot reuse and a compaction pass leaves survivors' posteriors equal to
+    a fresh engine built from only the survivors."""
+    r = np.random.default_rng(7)
+    ops = [("add", 0, 0), ("add", 3, 2), ("observe", 0, 1), ("add", 5, 1),
+           ("observe", 1, 0), ("retire", 0, 0), ("add", 2, 4),
+           ("observe", 2, 2), ("observe", 0, 0), ("retire", 1, 0),
+           ("add", 4, 3), ("observe", 1, 1), ("observe", 2, 0),
+           ("add", 1, 1), ("retire", 2, 0), ("observe", 0, 2)]
+    ops += [("observe", int(a), int(b))
+            for a, b in r.integers(0, 50, size=(10, 2))]
+    cp, live = churn_round_trip(ops, compact_at=frozenset({9, 14}))
+    assert live, "sequence must leave survivors"
+    assert_survivors_match_fresh(cp, live)

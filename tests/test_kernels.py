@@ -31,6 +31,47 @@ def test_eirate_kernel_sweep(rng, n, N, bm, bu):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("n,N,k,bm,bu", [
+    (64, 8, 4, 64, 8), (200, 33, 8, 64, 16), (513, 100, 16, 128, 64),
+    (17, 3, 4, 256, 256), (5, 2, 8, 256, 256),   # k > n: padded candidates
+])
+def test_eirate_topk_epilogue_sweep(rng, n, N, k, bm, bu):
+    """The block-local top-k epilogue == lax.top_k over the full score
+    vector: same values (fp32 tol) and same indices wherever scores are
+    distinct enough to rank."""
+    mu = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    sg = sg.at[: n // 4].set(0.0)
+    best = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    mem = jnp.asarray(rng.random((N, n)) < 0.4)
+    cost = jnp.asarray(rng.uniform(0.3, 3.0, n), jnp.float32)
+    sel = jnp.asarray(rng.random(n) < 0.25)
+    vk, ik = ops.eirate_topk(mu, sg, best, mem, cost, sel, k=k,
+                             block_models=bm, block_users=bu, interpret=True)
+    vr, ir = ref.eirate_topk_ref(mu, sg, best, mem, cost, sel, k=k)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               atol=1e-4, rtol=1e-4)
+    valid = np.asarray(vr) > -1e29
+    assert (np.asarray(ik)[valid] == np.asarray(ir)[valid]).all()
+
+
+def test_eirate_topk_tie_break_lowest_index():
+    """All-equal scores: the epilogue must rank candidates by ascending
+    index across blocks, exactly like lax.top_k (the sharded argmax's
+    exactness depends on it)."""
+    n, N = 48, 3
+    mu = jnp.zeros(n, jnp.float32)
+    sg = jnp.ones(n, jnp.float32)
+    best = jnp.zeros(N, jnp.float32)
+    mem = jnp.ones((N, n), bool)
+    cost = jnp.ones(n, jnp.float32)
+    sel = jnp.zeros(n, bool)
+    v, i = ops.eirate_topk(mu, sg, best, mem, cost, sel, k=6,
+                           block_models=16, interpret=True)
+    assert list(np.asarray(i)) == [0, 1, 2, 3, 4, 5]
+    assert (np.asarray(v) == np.asarray(v)[0]).all()
+
+
 # --- GP readout ----------------------------------------------------------------
 
 @pytest.mark.parametrize("k,n,bk,bn", [
@@ -45,6 +86,14 @@ def test_gp_readout_kernel_sweep(rng, k, n, bk, bn):
     m2, v2 = ref.gp_readout_ref(W, alpha, mu0, kd)
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=2e-4, rtol=2e-4)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=2e-4, rtol=2e-4)
+    # emit_sd epilogue: sigma in one pass, kernel and reference paths agree
+    m3, s3 = ops.gp_readout(W, alpha, mu0, kd, block_n=bn, block_k=bk,
+                            interpret=True, emit_sd=True)
+    np.testing.assert_allclose(np.asarray(m3), np.asarray(m2), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s3), np.sqrt(np.asarray(v2)),
+                               atol=2e-4, rtol=2e-4)
+    m4, s4 = ops.gp_readout(W, alpha, mu0, kd, emit_sd=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(s4), np.asarray(s3), atol=2e-4, rtol=2e-4)
 
 
 # --- flash attention --------------------------------------------------------------

@@ -4,12 +4,6 @@ The multi-device tests run in a subprocess so xla_force_host_platform_device_cou
 doesn't leak into the single-device test session.
 """
 
-import json
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
 import pytest
 
 from repro.sharding.rules import (
@@ -19,7 +13,7 @@ from repro.sharding.rules import (
     ParamSpec,
 )
 
-SRC = str(Path(__file__).resolve().parents[1] / "src")
+from conftest import run_forced_devices_subprocess
 
 
 def test_rules_lookup_and_override():
@@ -37,16 +31,7 @@ def test_mesh_axes_deduplicates_repeated_axes():
     assert spec[0] == "model" and spec[1] is None
 
 
-def _run_subprocess(code: str) -> dict:
-    prog = textwrap.dedent(code)
-    out = subprocess.run(
-        [sys.executable, "-c", prog],
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "HOME": "/root"},
-        capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+_run_subprocess = run_forced_devices_subprocess
 
 
 @pytest.mark.slow
@@ -57,7 +42,7 @@ def test_train_step_runs_on_2x4_mesh():
         import json
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
-        from repro.launch.mesh import make_test_mesh
+        from repro.launch.mesh import make_test_mesh, mesh_context
         from repro.launch.specs import build_cell
         from repro.models.layers import init_from_specs
         from repro.sharding.rules import DEFAULT_RULES
@@ -84,7 +69,7 @@ def test_train_step_runs_on_2x4_mesh():
         from repro.train.train_step import train_state_specs
         st_sh = shardings_for_tree(train_state_specs(cfg, opt_cfg), mesh, DEFAULT_RULES)
         state = jax.device_put(state, st_sh)
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             step = jax.jit(fn, in_shardings=(st_sh, None), out_shardings=(st_sh, None))
             state2, metrics = step(state, batch)
         wq = state2.params["blocks"]["attn"]["wq"]
@@ -108,7 +93,7 @@ def test_dryrun_cell_on_small_mesh_has_collectives():
         import json
         import jax
         from repro.configs import get_smoke_config
-        from repro.launch.mesh import make_test_mesh
+        from repro.launch.mesh import make_test_mesh, mesh_context
         from repro.launch.specs import build_cell
         from repro.launch.hlo_analysis import parse_collectives
         from repro.sharding.rules import DEFAULT_RULES
@@ -116,7 +101,7 @@ def test_dryrun_cell_on_small_mesh_has_collectives():
         mesh = make_test_mesh(data=2, model=4)
         cfg = get_smoke_config("qwen3-4b")
         cell = build_cell(cfg, "train_4k", mesh, DEFAULT_RULES)
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                                out_shardings=cell.out_shardings,
                                donate_argnums=cell.donate_argnums

@@ -89,11 +89,19 @@ def test_churn_trace_end_to_end_n_much_greater_than_m():
     # admission control actually engaged under N >> M pressure
     assert s["queue_depth_max"] > 0
     # every successful observation belongs to an admitted tenant, and no
-    # model is observed twice
-    seen = [t.model for t in res.trials if t.z is not None]
+    # tenant has any of its models observed twice (global ids are recycled
+    # across sessions, so uniqueness holds per tenant, not per id)
+    seen = [(t.tenant_key, t.local_model) for t in res.trials if t.z is not None]
     assert len(seen) == len(set(seen))
     # the cap was respected at all times (checked via engine accounting)
     assert eng._live_models <= 120
+    # slot reuse bounds the index space by the live-model cap, not by the
+    # ~2000 models the 200 sessions brought in total (DESIGN.md §10)
+    assert eng.cp.capacity <= 4 * 120
+    total_admitted_models = sum(
+        tr.arrive.num_models for tr in res.tenants.values()
+        if tr.admitted_at is not None)
+    assert total_admitted_models > eng.cp.capacity
 
 
 def test_departed_tenant_stops_being_served():
@@ -220,6 +228,77 @@ def test_queued_tenant_departure_unblocks_the_line():
     rc = res.tenants[2]
     assert rc.admitted_at == 3.0   # admitted the moment b left the queue head
     assert res.tenants[1].admitted_at is None
+
+
+def test_arrive_then_depart_while_queued_full_audit():
+    """Satellite audit: a tenant that departs while still in the admission
+    queue must leave every account clean — telemetry depart mark, queue
+    depth series, session counts, live-model capacity — and must never be
+    admitted or served afterwards."""
+    a = _tiny_tenant(0, at=0.0, m=8, seed=1)
+    b = _tiny_tenant(1, at=1.0, m=8, seed=2)      # queued: 8+8 > 10
+    trace = ChurnTrace((a, b, TenantDepart(at=2.0, tenant_key=1),
+                        TenantDepart(at=50.0, tenant_key=0)))
+    eng = StreamEngine(fleet_of(2), "mdmt", seed=0, max_live_models=10)
+    res = eng.run(trace)
+    s = res.telemetry.summary()
+    rb = res.tenants[1]
+    assert rb.departed and rb.admitted_at is None and rb.tenant_id is None
+    assert res.telemetry.tenants[1].departed == 2.0
+    assert s["sessions_departed_while_queued"] == 1
+    assert s["sessions_admitted"] == 1            # only tenant 0
+    # queue depth series saw the enqueue (1) and the drop back to 0
+    depths = [d for _, d in res.telemetry.queue_depth_samples]
+    assert 1 in depths and depths[-1] == 0
+    # the departed-queued tenant never ran, live-model accounting balanced
+    assert not any(t.tenant_key == 1 for t in res.trials)
+    assert eng._live_models == 0
+    # tenant 0 was unaffected: fully explored
+    t0 = {t.local_model for t in res.trials if t.tenant_key == 0 and t.z is not None}
+    assert t0 == set(range(8))
+
+
+def test_stale_warm_start_entry_on_recycled_slot_is_skipped():
+    """Regression for slot reuse: tenant A departs with warm-start entries
+    still queued; tenant B reuses A's model slots.  The stale entries must
+    be skipped (they belong to A), not launched as B's models."""
+    slow = TenantArrive(at=0.0, tenant_key=9, K_block=0.04 * np.eye(1) + 0.0,
+                        mu0=np.array([0.5]), cost=np.array([30.0]),
+                        z_true=np.array([0.7]))
+    a = _tiny_tenant(0, at=1.0, m=3, seed=1)
+    b = _tiny_tenant(1, at=3.0, m=3, seed=2)
+    trace = ChurnTrace((slow, a, TenantDepart(at=2.0, tenant_key=0), b))
+    # one slice: busy with the slow trial until t=30, so A's warm entries
+    # are still pending when A departs and B recycles A's slots
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0)
+    res = eng.run(trace)
+    assert not any(t.tenant_key == 0 for t in res.trials)
+    assert res.tenants[1].model_start == res.tenants[0].model_start  # reused
+    b_obs = {t.local_model for t in res.trials
+             if t.tenant_key == 1 and t.z is not None}
+    assert b_obs == {0, 1, 2}
+
+
+def test_engine_compaction_keeps_service_consistent():
+    """compact_every: block relocations under churn must not corrupt
+    ownership, launch bookkeeping, or posteriors (per-tenant uniqueness and
+    full exploration still hold)."""
+    trace = poisson_churn_trace(num_sessions=40, arrival_rate=1.0, seed=5,
+                                m_min=2, m_max=10, session_scale=30.0)
+    eng = StreamEngine(fleet_of(4), "mdmt", seed=0, max_live_models=40,
+                       num_shards=4, compact_every=1, compact_imbalance=1.05)
+    res = eng.run(trace)
+    seen = [(t.tenant_key, t.local_model) for t in res.trials if t.z is not None]
+    assert len(seen) == len(set(seen))
+    assert res.compaction_moves > 0
+    # the control plane's view stayed coherent: every live block's ids are
+    # exactly the membership row, confined to one shard span
+    cp = eng.cp
+    for tid in np.nonzero(cp.tenant_live)[0]:
+        ids = np.nonzero(cp.membership[tid])[0]
+        pl = cp._layout.blocks[int(tid)]
+        assert ids[0] == pl.start and ids[-1] == pl.stop - 1
+        assert cp._layout.shard_of(pl.start) == cp._layout.shard_of(pl.stop - 1)
 
 
 def test_rejected_observations_count_as_busy_time():
