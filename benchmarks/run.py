@@ -15,6 +15,8 @@ Sections (default: all):
   shard     sharded scoring plane: decision latency vs |L| x mesh size
             (shard_scale; multi-shard rows need forced host devices, e.g.
             XLA_FLAGS=--xla_force_host_platform_device_count=4)
+  devchurn  elastic device plane: batched vs sequential assignment cost,
+            device-aware vs speed-oblivious regret, autoscale (device_churn)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -42,13 +44,14 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "roofline")
+            "devchurn", "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
     "fig2": "fig2", "fig3": "fig3", "fig4": "fig4", "fig5": "fig5",
     "control": "control_plane", "stream": "stream_churn",
-    "shard": "shard_scale", "roofline": "roofline",
+    "shard": "shard_scale", "devchurn": "device_churn",
+    "roofline": "roofline",
 }
 
 
@@ -100,6 +103,8 @@ def main() -> None:
                 from . import stream_churn as m
             elif section == "shard":
                 from . import shard_scale as m
+            elif section == "devchurn":
+                from . import device_churn as m
             elif section == "roofline":
                 from . import roofline as m
             else:

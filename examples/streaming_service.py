@@ -3,9 +3,14 @@
 Generates a seeded churn trace (Poisson arrivals, heavy-tailed session
 lengths, Zipf-skewed candidate-set sizes), replays it through the streaming
 engine over an 8-slice fleet with admission control, and prints the
-service-level telemetry.  Used by CI as a smoke test:
+service-level telemetry — including per-device and speed-weighted
+utilization.  ``--device-churn`` switches to the elastic device plane
+(DESIGN.md §11): a 2-speed-class fleet with device joins/leaves/preemptions
+overlaid on the tenant churn, joint batched assignment, and an autoscaler.
+Used by CI as a smoke test:
 
   PYTHONPATH=src python examples/streaming_service.py --events 50
+  PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
 """
 
 from __future__ import annotations
@@ -15,7 +20,7 @@ import json
 import time
 
 from repro.core.fleet import Fleet
-from repro.stream import StreamEngine, poisson_churn_trace
+from repro.stream import StreamEngine, device_churn_trace, poisson_churn_trace
 
 
 def main() -> None:
@@ -29,23 +34,48 @@ def main() -> None:
     p.add_argument("--max-live-models", type=int, default=120,
                    help="admission-control cap (0 disables)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--device-churn", action="store_true",
+                   help="elastic 2-speed-class fleet with device churn + "
+                        "autoscale (repro.devplane)")
     p.add_argument("--telemetry-json", default=None,
                    help="optional path for the full telemetry dump")
     args = p.parse_args()
 
     sessions = max(1, args.events // 2)
-    trace = poisson_churn_trace(
-        num_sessions=sessions, arrival_rate=1.0, seed=args.seed,
-        m_min=2, m_max=16, session_scale=25.0,
-        num_failure_slices=min(2, args.slices))
+    if args.device_churn:
+        from repro.devplane import (AutoscalePolicy, DevPlaneEngine,
+                                    two_class_registry)
+        trace = device_churn_trace(
+            num_sessions=sessions, arrival_rate=1.0, seed=args.seed,
+            initial_slices=args.slices,
+            join_classes=(("fast", 32, 2.0), ("slow", 32, 1.0)),
+            join_rate=0.05, leave_rate=0.02, preempt_rate=0.03,
+            m_min=2, m_max=16, session_scale=25.0)
+    else:
+        trace = poisson_churn_trace(
+            num_sessions=sessions, arrival_rate=1.0, seed=args.seed,
+            m_min=2, m_max=16, session_scale=25.0,
+            num_failure_slices=min(2, args.slices))
     print(f"trace: {trace.name} ({trace.num_events} events, "
           f"{trace.num_sessions} sessions)")
 
-    fleet = Fleet.partition_pod(total_chips=32 * args.slices,
-                                num_slices=args.slices)
-    eng = StreamEngine(
-        fleet, args.policy, seed=args.seed,
-        max_live_models=args.max_live_models or None)
+    if args.device_churn:
+        reg = two_class_registry(2.0, overhead=0.5, chips=32)
+        half = max(1, args.slices // 2)
+        fleet = reg.build_fleet([("slow", args.slices - half),
+                                 ("fast", half)])
+        eng = DevPlaneEngine(
+            fleet, args.policy, seed=args.seed, registry=reg,
+            assign="batched", launch_order="fastest",
+            autoscale=AutoscalePolicy(join_class="fast", cooldown=5.0,
+                                      max_devices=2 * args.slices),
+            max_live_models=args.max_live_models or None)
+    else:
+        fleet = Fleet.partition_pod(total_chips=32 * args.slices,
+                                    num_slices=args.slices)
+        eng = StreamEngine(
+            fleet, args.policy, seed=args.seed,
+            max_live_models=args.max_live_models or None)
     t0 = time.perf_counter()
     res = eng.run(trace)
     wall = time.perf_counter() - t0
@@ -55,6 +85,14 @@ def main() -> None:
           f"({res.decisions} decisions, "
           f"{1e6 * res.decision_seconds / max(res.decisions, 1):.0f} µs each)")
     print(json.dumps(s, indent=2, sort_keys=True))
+    per_dev = res.telemetry.per_device()
+    print("\nper-device utilization (busy / in-service window):")
+    for d in sorted(per_dev):
+        pd = per_dev[d]
+        left = "-" if pd["left"] is None else f"{pd['left']:.1f}"
+        print(f"  slice {d:3d}  speed {pd['speed']:.1f}  "
+              f"window [{pd['joined']:.1f}, {left}]  "
+              f"trials {pd['trials']:3d}  util {pd['utilization']:.3f}")
     if args.telemetry_json:
         path = res.telemetry.to_json(args.telemetry_json)
         print(f"telemetry -> {path}")

@@ -36,8 +36,10 @@ from .control_plane import (  # noqa: F401
 )
 from .ei import (  # noqa: F401
     choose_next,
+    choose_topk_classes,
     ei_matrix,
     ei_total,
+    eirate_class_scores,
     eirate_scores,
     expected_improvement,
     tau,

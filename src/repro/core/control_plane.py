@@ -51,7 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ei import choose_next_fused, single_tenant_ei_scores
+from .ei import (
+    choose_next_fused,
+    choose_topk_classes,
+    single_tenant_ei_scores,
+    topk_rows_padded,
+)
 from .gp import DEFAULT_JITTER, BlockIncrementalGP, make_gp
 from .tenancy import Problem
 
@@ -459,6 +464,50 @@ class ControlPlane:
         if not np.isfinite(score) or score <= -1e29:
             return None
         return idx, -1
+
+    def choose_mdmt_batch(self, rates, overheads,
+                          k: int) -> tuple[np.ndarray, np.ndarray]:
+        """One scoring pass for a k-device joint assignment (DESIGN.md §11).
+
+        ``rates``/``overheads`` carry one entry per *device class* present
+        in the batch; class c's cost row is ``cost / rates[c] +
+        overheads[c]``.  Returns per-class EIrate top-k over the unselected
+        pool as numpy ``(values (C, k), global ids (C, k))`` — the greedy
+        device<->model solver (``devplane.assign``) consumes them.  With a
+        single class at rate 1 / overhead 0, row 0's head is bit-identical
+        to :meth:`choose_mdmt`'s pick (the ``/ 1.0`` and ``+ 0.0`` are IEEE
+        identities), which is the batched == sequential contract.
+        """
+        rates_j = jnp.asarray(np.asarray(rates, np.float32))
+        over_j = jnp.asarray(np.asarray(overheads, np.float32))
+        if self.selected.all():
+            # same early-out as choose_mdmt: an empty pool must not pay a
+            # scoring pass (dry passes dominate idle stretches)
+            C = rates_j.shape[0]
+            return (np.full((C, k), -np.inf, np.float32),
+                    np.zeros((C, k), np.int64))
+        if self.scorer == "sharded":
+            if hasattr(self.gp, "posterior_host"):
+                mu, var = self.gp.posterior_host()
+                sd = np.sqrt(var)
+            else:
+                mu, sd = self.gp.posterior_sd()
+            v, g = self._sharded.decide_topk_classes(
+                mu, sd, self._best_j, self.selected, rates_j, over_j, k=k)
+            return np.asarray(v), np.asarray(g)
+        mu, sd = self.gp.posterior_sd()
+        cm = self._cost_j[None, :] / rates_j[:, None] + over_j[:, None]
+        if self.scorer == "ops":
+            from repro.kernels import ops
+            scores = ops.eirate_classes(
+                mu, sd, self._best_j, self._membership_j, cm,
+                self._selected_j, use_pallas=jax.default_backend() == "tpu")
+            v, i = topk_rows_padded(scores, k)
+        else:
+            v, i = choose_topk_classes(
+                mu, sd, self._best_j, self._membership_j, cm,
+                self._selected_j, k=k)
+        return np.asarray(v), np.asarray(i)
 
     def _users_with_work(self) -> np.ndarray:
         has_work = (self.membership & ~self.selected[None, :]).any(axis=1)

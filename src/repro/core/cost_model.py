@@ -80,6 +80,20 @@ class CostModel:
             est = (1 - self.measured_blend) * est + self.measured_blend * self._measured[key]
         return est
 
+    def class_trial_seconds(self, arch: str, shape: str, steps: int, *,
+                            chips: int, speed: float = 1.0,
+                            overhead: float = 30.0, cfg=None) -> float:
+        """c(x, d) — the Remark-1 estimate specialized to one *device class*
+        (``repro.devplane.DeviceClass``): the roofline step time at the
+        class's chip count, scaled by the class's clock-speed multiplier,
+        plus the fixed per-trial overhead.  The overhead does NOT scale with
+        speed (setup/compile is host-bound), which is exactly what makes the
+        (device-class x model) cost matrix genuinely 2-D — an affine map of
+        the base cost, not the rank-1 ``c(x)/speed_d`` (DESIGN.md §11)."""
+        if speed <= 0:
+            raise ValueError(f"speed must be positive, got {speed}")
+        return overhead + steps * self.step_seconds(arch, shape, chips, cfg) / speed
+
     def observe(self, arch: str, shape: str, chips: int, measured_seconds: float):
         """Historical-data update (Remark 1): EMA of observed trial durations."""
         key = (arch, shape, chips)

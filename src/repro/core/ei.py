@@ -20,6 +20,8 @@ default path on CPU.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.scipy.stats import norm
@@ -113,6 +115,71 @@ def choose_next_fused(
     scores = jnp.where(selected, NEG_INF, total / cost)
     idx = jnp.argmax(scores)
     return idx, scores[idx]
+
+
+@jax.jit
+def eirate_class_scores(
+    mu: jax.Array,
+    sigma: jax.Array,
+    best_per_user: jax.Array,
+    membership: jax.Array,
+    cost_matrix: jax.Array,
+    selected: jax.Array,
+) -> jax.Array:
+    """(C, n) EIrate over (device class x model) — the 2-D generalization of
+    eqs. (5)-(6) the elastic device plane scores (DESIGN.md §11).
+
+    ``cost_matrix[c, x]`` is c(x, d) for a device of class c; the EI sum over
+    tenants is computed ONCE and broadcast against every class's cost row,
+    so a k-device joint assignment costs one scoring pass, not k.
+
+    A non-finite cost (the registry's memory gate emits +inf for a model
+    that does not fit a class) is a hard exclusion: the score is -inf, not
+    the 0 that a naive division would produce (0 could still win a row
+    whose every fitting candidate has zero EI).
+    """
+    total = ei_total(mu, sigma, best_per_user, membership)
+    scores = jnp.where(jnp.isfinite(cost_matrix),
+                       total[None, :] / cost_matrix, NEG_INF)
+    return jnp.where(selected[None, :], NEG_INF, scores)
+
+
+def topk_rows_padded(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row top-k of a (C, n) score matrix, padded with (-inf, id 0)
+    entries when n < k so the shape is always (C, k) — one definition of
+    the pad convention, shared by every class-axis scorer."""
+    kk = min(k, scores.shape[1])
+    v, i = jax.lax.top_k(scores, kk)
+    if kk < k:
+        pad = k - kk
+        v = jnp.concatenate(
+            [v, jnp.full((v.shape[0], pad), NEG_INF, v.dtype)], axis=1)
+        i = jnp.concatenate(
+            [i, jnp.zeros((i.shape[0], pad), i.dtype)], axis=1)
+    return v, i
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def choose_topk_classes(
+    mu: jax.Array,
+    sigma: jax.Array,
+    best_per_user: jax.Array,
+    membership: jax.Array,
+    cost_matrix: jax.Array,
+    selected: jax.Array,
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-class EIrate top-k in one dispatch: (values (C, k), ids (C, k)).
+
+    Row c's candidates feed the greedy device<->model assignment solver
+    (``devplane.assign``); ``lax.top_k`` keeps the earlier element on ties,
+    so each row's order matches sequential ``jnp.argmax``-with-masking
+    exactly — the batched == sequential equivalence leans on this.
+    """
+    scores = eirate_class_scores(mu, sigma, best_per_user, membership,
+                                 cost_matrix, selected)
+    return topk_rows_padded(scores, k)
 
 
 @jax.jit

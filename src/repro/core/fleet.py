@@ -8,12 +8,23 @@ never observed, so it simply returns to L \\ L(t)) and rejoins after repair.
 
 Heterogeneity: per-slice ``speed`` scales effective c(x); the MDMT policy is
 device-aware through EIrate = EI(x) / (c(x)/speed_d) (a strict generalization
-of eq. 5, see scheduler.py).
+of eq. 5, see scheduler.py).  ``cls`` names the slice's *device class* in a
+:class:`repro.devplane.DeviceClassRegistry` — the registry routes per-class
+trial costs through the roofline cost model, making the cost genuinely 2-D
+over (device, model) instead of the rank-1 ``c(x)/speed_d`` (DESIGN.md §11).
+
+Elasticity: slices can :meth:`join` (a new device arrives at runtime),
+:meth:`leave` (permanently decommissioned — the in-flight trial dies like a
+failure, but the slice never repairs), and be :meth:`preempt`-ed (the trial
+is evicted, the slice is immediately schedulable again).  The streaming
+device plane (``repro.devplane``) drives all three from trace events.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+DEFAULT_CLASS = "base"
 
 
 @dataclass
@@ -24,6 +35,8 @@ class DeviceSlice:
     healthy: bool = True
     busy_until: float = 0.0
     current_trial: int | None = None
+    cls: str = DEFAULT_CLASS       # device-class name (devplane registry key)
+    retired: bool = False          # left the fleet for good (never recovers)
 
 
 @dataclass
@@ -40,11 +53,14 @@ class Fleet:
 
     @property
     def num_devices(self) -> int:
-        return len(self.slices)
+        """Devices currently in the fleet (retired slices keep their ids but
+        no longer count — a joined replacement gets a fresh id)."""
+        return sum(1 for s in self.slices if not s.retired)
 
     def free_at(self, t: float) -> list[DeviceSlice]:
         return [s for s in self.slices
-                if s.healthy and s.current_trial is None and s.busy_until <= t]
+                if s.healthy and not s.retired
+                and s.current_trial is None and s.busy_until <= t]
 
     def fail(self, slice_id: int) -> int | None:
         """Mark slice failed; returns the killed trial id (to re-queue).
@@ -60,3 +76,31 @@ class Fleet:
 
     def recover(self, slice_id: int):
         self.slices[slice_id].healthy = True
+
+    # ---- elasticity (the device plane's lifecycle verbs) --------------------
+
+    def join(self, chips: int, speed: float = 1.0,
+             cls: str = DEFAULT_CLASS) -> DeviceSlice:
+        """A new slice arrives at runtime (cluster scale-up, a spot device
+        granted).  Slice ids are append-only — a retired id is never reused,
+        so pending completion events can never alias a new device."""
+        s = DeviceSlice(len(self.slices), chips, speed, cls=cls)
+        self.slices.append(s)
+        return s
+
+    def leave(self, slice_id: int) -> int | None:
+        """Permanent decommission: the in-flight trial dies exactly like a
+        slice failure (returns the killed trial id), but the slice is marked
+        retired and never recovers."""
+        killed = self.fail(slice_id)
+        self.slices[slice_id].retired = True
+        return killed
+
+    def preempt(self, slice_id: int) -> int | None:
+        """Evict the in-flight trial (returns its id to re-queue) but keep
+        the slice healthy and immediately schedulable — the spot-market /
+        higher-priority-work eviction, distinct from a failure's downtime."""
+        s = self.slices[slice_id]
+        s.busy_until = 0.0
+        killed, s.current_trial = s.current_trial, None
+        return killed

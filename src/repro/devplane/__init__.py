@@ -1,0 +1,35 @@
+"""Elastic device plane: heterogeneous fleets, device churn, joint batched
+device<->model assignment (DESIGN.md §11).
+
+The paper allocates M identical, static devices.  A provider's fleet is
+neither: hardware classes differ (chips per slice, clock speed, memory —
+and which class a trial lands on changes its cost, hence which candidate
+wins), and the fleet itself churns (scale-ups, decommissions, spot
+preemptions).  This package makes both first-class:
+
+  registry.py   device classes + per-class trial costs routed through the
+                roofline cost model — the (device x model) cost matrix is
+                genuinely 2-D (affine per class), not rank-1 c(x)/speed_d
+  assign.py     the joint batched assignment solver: k simultaneously-free
+                devices served by ONE scoring pass (per-class EIrate top-k,
+                dense or sharded) + a greedy auction, provably identical to
+                k sequential argmaxes on homogeneous fleets
+  autoscale.py  queue-depth-driven fleet sizing (join/retire at event times)
+  engine.py     DevPlaneEngine: StreamEngine + DeviceJoin/Leave/Preempt
+                handling, 2-D costs, batched assignment, autoscale
+
+Equivalence ladder (each rung tested): ``scheduler.simulate`` ==
+churn-free ``StreamEngine`` == device-churn-free ``DevPlaneEngine``; and
+batched == sequential assignment on homogeneous fleets.
+"""
+
+from .assign import greedy_assign  # noqa: F401
+from .autoscale import AutoscalePolicy  # noqa: F401
+from .engine import DevPlaneEngine  # noqa: F401
+from .registry import (  # noqa: F401
+    BASE_CLASS,
+    REFERENCE_CHIPS,
+    DeviceClass,
+    DeviceClassRegistry,
+    two_class_registry,
+)

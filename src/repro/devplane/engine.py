@@ -1,0 +1,252 @@
+"""The elastic streaming engine: device churn + joint batched assignment.
+
+:class:`DevPlaneEngine` extends :class:`repro.stream.engine.StreamEngine`
+with the device half of the service (DESIGN.md §11):
+
+  DeviceJoin     -> ``Fleet.join`` appends a slice of the event's class; it
+                    enters the free pool and the next launch pass uses it
+  DeviceLeave    -> permanent decommission; the in-flight trial dies exactly
+                    like a slice failure (model back to L \\ L(t)) but the
+                    slice never recovers
+  DevicePreempt  -> the in-flight trial is evicted and re-queued like a
+                    slice failure; the slice is immediately schedulable
+  autoscale      -> a queue-depth-driven policy (``autoscale.py``) joins /
+                    retires devices at event times
+
+Costs come from a :class:`~repro.devplane.registry.DeviceClassRegistry`:
+durations and EIrate denominators are the per-class affine
+``overhead_c + c(x)/rate_c``, so the (free devices x live models) score
+matrix is genuinely 2-D and the launch decision is an *assignment*, not an
+argmax.
+
+``assign="batched"`` solves that assignment for ALL simultaneously-free
+devices in one scoring pass (``ControlPlane.choose_mdmt_batch`` — per-class
+top-k, dense or sharded — feeding ``assign.greedy_assign``) instead of one
+pass per device.  ``assign="sequential"`` keeps per-device decisions but
+scores them with the same 2-D costs (a batch of one), so the two modes are
+decision-equivalent on homogeneous fleets (tested) and differ only where
+heterogeneity makes joint assignment genuinely better.
+
+With a homogeneous zero-overhead registry, no device events, and
+``assign="sequential"`` the engine IS the base ``StreamEngine`` — byte-
+identical trial sequences (tests/test_devplane.py), the same discipline as
+the churn-free == ``scheduler.simulate`` contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+
+import numpy as np
+
+from repro.stream.engine import StreamEngine
+from repro.stream.workload import DeviceJoin, DeviceLeave, DevicePreempt
+
+from .assign import greedy_assign
+from .autoscale import AutoscalePolicy
+from .registry import DeviceClassRegistry
+
+ASSIGN_MODES = ("batched", "sequential")
+
+
+class DevPlaneEngine(StreamEngine):
+    """Streaming GP-EI over an elastic, heterogeneous fleet (module
+    docstring).  Extra knobs on top of StreamEngine:
+
+    * ``registry`` — device classes; defaults to a zero-overhead rank-1
+      registry synthesized from the fleet (backward-compatible costs).
+    * ``assign`` — ``"batched"`` (one scoring pass per free wave) or
+      ``"sequential"`` (one per device).  Non-mdmt policies always take the
+      base per-tenant path.
+    * ``autoscale`` — an :class:`AutoscalePolicy`, or None.
+    * ``speed_oblivious`` — score as if every device were the reference
+      class (durations stay real); the regret baseline the device-aware
+      plane is measured against.
+    """
+
+    def __init__(self, fleet, policy: str = "mdmt", *,
+                 registry: DeviceClassRegistry | None = None,
+                 assign: str = "batched",
+                 autoscale: AutoscalePolicy | None = None,
+                 speed_oblivious: bool = False,
+                 **kw):
+        super().__init__(fleet, policy, **kw)
+        if assign not in ASSIGN_MODES:
+            raise ValueError(
+                f"assign must be one of {ASSIGN_MODES}, got {assign!r}")
+        self.registry = registry or DeviceClassRegistry.from_fleet(fleet)
+        self.assign = assign
+        # private copy with a fresh cooldown clock: sharing one policy
+        # object across engines must not leak run state between replays
+        self.autoscale = (None if autoscale is None
+                          else dataclasses.replace(autoscale))
+        self.speed_oblivious = speed_oblivious
+        if autoscale is not None and autoscale.join_class not in self.registry:
+            raise ValueError(
+                f"autoscale join_class {autoscale.join_class!r} is not in "
+                "the registry")
+        for s in fleet.slices:
+            if s.cls not in self.registry:
+                raise ValueError(f"slice {s.slice_id} has unregistered "
+                                 f"device class {s.cls!r}")
+        self._autoscale_joins = 0
+        self._autoscale_leaves = 0
+        self._scoring_passes = 0
+
+    # ---- costs -------------------------------------------------------------
+
+    def _duration_on(self, model: int, s) -> float:
+        """The registry's 2-D cost: overhead + base/rate for the slice's
+        class (reduces to the base engine's c(x)/speed for zero-overhead
+        synthesized registries)."""
+        return float(self.registry[s.cls].cost_on(self.cp.cost[model]))
+
+    # ---- device lifecycle --------------------------------------------------
+
+    def _ingest(self, ev) -> None:
+        if isinstance(ev, DeviceJoin):
+            self._push(ev.at, "dev_join", (ev,))
+        elif isinstance(ev, DeviceLeave):
+            self._push(ev.at, "dev_leave", (ev.slice_id,))
+        elif isinstance(ev, DevicePreempt):
+            self._push(ev.at, "dev_preempt", (ev.slice_id,))
+        else:
+            super()._ingest(ev)
+
+    def _dispatch_extra(self, kind: str, payload: tuple) -> None:
+        if kind == "dev_join":
+            self._handle_dev_join(*payload)
+        elif kind == "dev_leave":
+            self._handle_dev_leave(*payload)
+        elif kind == "dev_preempt":
+            self._handle_dev_preempt(*payload)
+        else:
+            super()._dispatch_extra(kind, payload)
+
+    def _join_device(self, cls_name: str, chips: int | None = None):
+        c = self.registry[cls_name]
+        s = self.fleet.join(chips or c.chips, c.rate, cls=cls_name)
+        self._free.append(s.slice_id)
+        self.telemetry.on_device_join(self._t, s.slice_id, s.speed)
+        return s
+
+    def _handle_dev_join(self, ev: DeviceJoin) -> None:
+        # the registry is authoritative for cost semantics; a trace that
+        # declares a different speed for the class is a config error, not
+        # something to silently override
+        c = self.registry[ev.cls]
+        if ev.speed != c.rate:
+            raise ValueError(
+                f"DeviceJoin speed {ev.speed} disagrees with registered "
+                f"class {ev.cls!r} rate {c.rate}")
+        self._join_device(ev.cls, ev.chips)
+
+    def _handle_dev_leave(self, slice_id: int) -> None:
+        if slice_id >= len(self.fleet.slices):
+            return                     # trace id math raced autoscale joins
+        s = self.fleet.slices[slice_id]
+        if s.retired:
+            return                     # duplicate leave in the trace
+        killed = self.fleet.leave(slice_id)
+        if killed is not None:
+            self._kill_trial(killed)
+        elif slice_id in self._free:
+            self._free.remove(slice_id)
+        self.telemetry.on_device_leave(self._t, slice_id)
+
+    def _handle_dev_preempt(self, slice_id: int) -> None:
+        if slice_id >= len(self.fleet.slices):
+            return                     # trace id math raced autoscale joins
+        s = self.fleet.slices[slice_id]
+        if s.retired or not s.healthy:
+            return                     # raced a leave / is already down
+        killed = self.fleet.preempt(slice_id)
+        if killed is not None:
+            self._kill_trial(killed, preempted=True)
+            # the slice survives the eviction: immediately schedulable
+            if slice_id not in self._free:
+                self._free.append(slice_id)
+
+    # ---- autoscale ---------------------------------------------------------
+
+    def _post_event(self, kind: str) -> None:
+        if self.autoscale is None or not self.autoscale.ready(self._t):
+            return                     # skip the O(capacity) backlog scan
+        backlog = int(np.count_nonzero(~self.cp.selected & self.cp.model_live))
+        action = self.autoscale.decide(
+            self._t, backlog=backlog, num_devices=self.fleet.num_devices,
+            num_free=len(self._free))
+        if action == "join":
+            self._join_device(self.autoscale.join_class)
+            self._autoscale_joins += 1
+        elif action == "leave":
+            # retire the slowest idle slice (ties: lowest id)
+            sid = min(self._free,
+                      key=lambda d: (self.fleet.slices[d].speed, d))
+            self.fleet.leave(sid)
+            self._free.remove(sid)
+            self.telemetry.on_device_leave(self._t, sid)
+            self._autoscale_leaves += 1
+
+    # ---- the joint batched launch pass -------------------------------------
+
+    def _free_priority_order(self) -> list[int]:
+        """Free-list indices in launch-priority order: the exact sequence
+        ``_pick_free_index`` would visit as devices are consumed — the
+        solver's device tie-break order, which is what keeps batched ==
+        sequential on homogeneous fleets."""
+        idxs = list(range(len(self._free)))
+        if self.launch_order == "fastest":
+            idxs.sort(key=lambda i:
+                      (-self.fleet.slices[self._free[i]].speed, -i))
+        else:
+            idxs.reverse()
+        return idxs
+
+    def _try_launch(self, horizon: float) -> None:
+        if self.policy != "mdmt":
+            return super()._try_launch(horizon)
+        while self._free:
+            if self._t >= horizon:
+                return
+            if self._pop_pending_launch():
+                continue               # warm-start entries keep the base
+                                       # one-at-a-time semantics
+            order = self._free_priority_order()
+            if self.assign == "sequential":
+                order = order[:1]      # a batch of one = per-device decision
+            devices = [self._free[i] for i in order]
+            # class rows: unique class names in first-appearance order
+            cls_names: list[str] = []
+            rows: list[int] = []
+            for d in devices:
+                name = self.fleet.slices[d].cls
+                if name not in cls_names:
+                    cls_names.append(name)
+                rows.append(cls_names.index(name))
+            if self.speed_oblivious:
+                rates = np.ones(len(cls_names), np.float32)
+                overheads = np.zeros(len(cls_names), np.float32)
+            else:
+                rates, overheads = self.registry.rows(cls_names)
+
+            t0 = _time.perf_counter()
+            vals, gids = self.cp.choose_mdmt_batch(
+                rates, overheads, k=len(devices))
+            self._decision_seconds += _time.perf_counter() - t0
+            self._decisions += 1
+            self._scoring_passes += 1
+
+            pairs = greedy_assign(vals, gids, rows)
+            if not pairs:
+                return                 # pool exhausted for every free device
+            for pos, model in pairs:
+                # indices shift as devices launch: resolve by slice id
+                self._launch_on(self._free.index(devices[pos]), model, -1)
+                self._policy_launches += 1
+            if len(pairs) < len(devices):
+                return                 # the leftovers found nothing either
+
+
+__all__ = ["DevPlaneEngine", "ASSIGN_MODES"]

@@ -42,9 +42,8 @@ def _tau_terms(u):
     return u * cdf + pdf
 
 
-def _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref, member_ref,
-               out_ref):
-    j = pl.program_id(1)
+def _ei_partial(mu_ref, sigma_ref, best_ref, member_ref):
+    """One (bN, bn) tile's tenant-axis partial EI sum -> (bn,)."""
     mu = mu_ref[0, :]                       # (bn,)
     sg = sigma_ref[0, :]
     best = best_ref[:, 0]                   # (bN,)
@@ -55,7 +54,13 @@ def _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref, member_ref,
     ei = safe[None, :] * _tau_terms(u)
     ei_degenerate = jnp.maximum(mu[None, :] - best[:, None], 0.0)
     ei = jnp.where(sg[None, :] > 0, ei, ei_degenerate)
-    partial = jnp.sum(ei * mem, axis=0)     # (bn,)
+    return jnp.sum(ei * mem, axis=0)        # (bn,)
+
+
+def _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref, member_ref,
+               out_ref):
+    j = pl.program_id(1)
+    partial = _ei_partial(mu_ref, sigma_ref, best_ref, member_ref)
 
     @pl.when(j == 0)
     def _init():
@@ -70,6 +75,36 @@ def _ei_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref, member_ref,
         total = out_ref[0, :]
         score = total / cost_ref[0, :]
         out_ref[0, :] = jnp.where(selected_ref[0, :] > 0, NEG_LARGE, score)
+
+
+def _ei_classes_kernel(mu_ref, sigma_ref, cost_ref, selected_ref, best_ref,
+                       member_ref, out_ref):
+    """The EIrate kernel generalized to a (C, n) *cost matrix* — one row per
+    device class (DESIGN.md §11).  The tenant-axis EI sum is accumulated
+    ONCE (into row 0 of the output block) and the final-tenant epilogue
+    fans it out against every class's cost row, so a C-class scoring pass
+    reads the (N, n) membership tile exactly as often as the 1-class one."""
+    j = pl.program_id(1)
+    partial = _ei_partial(mu_ref, sigma_ref, best_ref, member_ref)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0, :] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[0, :] += partial
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _epilogue():
+        total = out_ref[0, :]
+        sel = selected_ref[0, :] > 0
+        # row 0 holds the accumulator: write it last.  A non-finite cost
+        # (memory gate) is a hard exclusion, same as the selected mask.
+        for c in range(cost_ref.shape[0] - 1, -1, -1):
+            row = cost_ref[c, :]
+            out_ref[c, :] = jnp.where(sel | ~jnp.isfinite(row),
+                                      NEG_LARGE, total / row)
 
 
 def _block_topk(score_row, k: int, block_base):
@@ -233,3 +268,51 @@ def eirate_topk_pallas(
         flati = jnp.concatenate([flati, jnp.zeros(pad, jnp.int32)])
     v, pos = jax.lax.top_k(flatv, k)
     return v, flati[pos]
+
+
+@functools.partial(jax.jit, static_argnames=("block_models", "block_users",
+                                             "interpret"))
+def eirate_classes_pallas(
+    mu: jax.Array,           # (n,)
+    sigma: jax.Array,        # (n,)
+    best: jax.Array,         # (N,)
+    membership: jax.Array,   # (N, n) bool/float
+    cost_matrix: jax.Array,  # (C, n) per-device-class c(x, d)
+    selected: jax.Array,     # (n,) bool
+    *,
+    block_models: int = 256,
+    block_users: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (C, n) per-class EIrate scores, -1e30 at selected models —
+    the elastic device plane's 2-D (free devices x live models) matrix in
+    one kernel launch (tenant sum accumulated once, fanned out per class)."""
+    n = mu.shape[0]
+    N = best.shape[0]
+    C = cost_matrix.shape[0]
+    bn = min(block_models, max(n, 1))
+    bN = min(block_users, max(N, 1))
+    (mu_p, sg_p, _, sel_p, best_p, mem_p), pn, pN = _pad_inputs(
+        mu, sigma, best, membership, jnp.ones_like(mu), selected, bn, bN)
+    cost_p = jnp.ones((C, pn), jnp.float32).at[:, :n].set(
+        cost_matrix.astype(jnp.float32))
+
+    grid = (pn // bn, pN // bN)
+    out = pl.pallas_call(
+        _ei_classes_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((C, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((bN, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bN, bn), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((C, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, pn), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(mu_p, sg_p, cost_p, sel_p, best_p, mem_p)
+    return out[:, :n]

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .ei_score import eirate_pallas, eirate_topk_pallas
+from .ei_score import eirate_classes_pallas, eirate_pallas, eirate_topk_pallas
 from .flash_attention import flash_attention_pallas
 from .gp_readout import gp_readout_pallas
 from .ssd import ssd_pallas
@@ -41,6 +41,19 @@ def eirate_topk(mu, sigma, best, membership, cost, selected, *, k=4,
     kw.setdefault("interpret", _interpret_default())
     return eirate_topk_pallas(mu, sigma, best, membership, cost, selected,
                               k=k, **kw)
+
+
+def eirate_classes(mu, sigma, best, membership, cost_matrix, selected, *,
+                   use_pallas=True, **kw):
+    """(C, n) per-device-class EIrate scores (cost_matrix is (C, n)) — the
+    elastic device plane's joint-assignment scoring pass (DESIGN.md §11).
+    The kernel accumulates the tenant EI sum once and fans it out per class."""
+    if not use_pallas:
+        return ref.eirate_classes_ref(mu, sigma, best, membership,
+                                      cost_matrix, selected)
+    kw.setdefault("interpret", _interpret_default())
+    return eirate_classes_pallas(mu, sigma, best, membership, cost_matrix,
+                                 selected, **kw)
 
 
 def gp_readout(W, alpha, mu0, k_diag, *, use_pallas=True, emit_sd=False, **kw):

@@ -29,6 +29,27 @@ def eirate_ref(mu, sigma, best, membership, cost, selected) -> jax.Array:
     return jnp.where(selected.astype(bool), -1e30, total / cost.astype(jnp.float32))
 
 
+def eirate_classes_ref(mu, sigma, best, membership, cost_matrix, selected):
+    """(C, n) per-class EIrate scores; -1e30 at selected models.  The naive
+    formulation: the tenant EI sum computed once, divided by every class's
+    cost row (matches the class-epilogue kernel)."""
+    mu = mu.astype(jnp.float32)
+    sigma = sigma.astype(jnp.float32)
+    best = best.astype(jnp.float32)
+    safe = jnp.where(sigma > 0, sigma, 1.0)
+    u = (mu[None, :] - best[:, None]) / safe[None, :]
+    tau = u * norm.cdf(u) + norm.pdf(u)
+    ei = safe[None, :] * tau
+    ei0 = jnp.maximum(mu[None, :] - best[:, None], 0.0)
+    ei = jnp.where(sigma[None, :] > 0, ei, ei0)
+    total = jnp.sum(jnp.where(membership.astype(bool), ei, 0.0), axis=0)
+    cm = cost_matrix.astype(jnp.float32)
+    # non-finite cost (memory gate) is a hard exclusion, not score 0 —
+    # matches ei.eirate_class_scores
+    scores = jnp.where(jnp.isfinite(cm), total[None, :] / cm, -1e30)
+    return jnp.where(selected.astype(bool)[None, :], -1e30, scores)
+
+
 def eirate_topk_ref(mu, sigma, best, membership, cost, selected, *, k=4):
     """(values (k,), indices (k,)) of the EIrate top-k; short vectors pad
     with -1e30 so the shape is k regardless of n."""

@@ -124,6 +124,52 @@ def _decide(mu, sd, best, member, cost, selected, speed, *, mesh, kernel, k):
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
+def _decide_classes(mu, sd, best, member, cost, selected, rates, overheads,
+                    *, mesh, kernel, k):
+    """Per-device-class decision in ONE shard_map program: each shard
+    computes its tenant-axis EI sum once, fans it out against every class's
+    cost row (``cost/rate_c + overhead_c`` — the affine 2-D cost of
+    DESIGN.md §11), reduces each class row to a local top-k, and one
+    all_gather serves every class's global pick.  With ``overheads == 0``
+    and a single class this is bit-identical to :func:`_decide` (the
+    ``+ 0.0`` and ``/ 1.0`` are IEEE identities), which is what lets the
+    joint batched assignment replay sequential decisions exactly on
+    homogeneous fleets."""
+    C = rates.shape[0]
+
+    def local(mu, sd, best, member, cost, selected, rates, overheads):
+        cm = cost[None, :] / rates[:, None] + overheads[:, None]   # (C, nl)
+        if kernel == "xla":
+            total = ei_total(mu, sd, best, member)
+            scores = jnp.where(selected[None, :], NEG_INF,
+                               total[None, :] / cm)
+        else:
+            from repro.kernels import ops
+            scores = ops.eirate_classes(mu, sd, best, member, cm, selected)
+        per = [_local_topk(scores[c], k) for c in range(C)]
+        v = jnp.stack([p[0] for p in per])       # (C, k)
+        g = jnp.stack([p[1] for p in per])
+        allv = jax.lax.all_gather(v, "shard")    # (S, C, k)
+        allg = jax.lax.all_gather(g, "shard")
+        return allv, allg
+
+    allv, allg = shard_map(
+        local, mesh=mesh,
+        in_specs=(P_MODELS, P_MODELS, P_TENANTS, P_MEMBER,
+                  P_MODELS, P_MODELS, P(), P()),
+        out_specs=(P(None), P(None)),
+        **_NO_REP_CHECK,
+    )(mu, sd, best, member, cost, selected, rates, overheads)
+    # (S, C, k) -> (C, S*k): per class the flat order stays (shard, rank)-
+    # major = ascending global id at equal value, so top_k's keep-earlier
+    # tie-break still resolves to the lowest global id
+    allv = allv.transpose(1, 0, 2).reshape(C, -1)
+    allg = allg.transpose(1, 0, 2).reshape(C, -1)
+    v, pos = jax.lax.top_k(allv, k)
+    return v, jnp.take_along_axis(allg, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
 def _readout_decide(W, alpha, mu0, kdiag, best, member, cost, selected, speed,
                     *, mesh, kernel, k):
     """The fully fused pipeline: sharded GP readout -> EIrate -> global
@@ -224,6 +270,25 @@ class ShardedScorer:
         tie-break) and its score."""
         v, g = self.decide_topk(mu, sd, best, selected, speed)
         return int(g[0]), float(v[0])
+
+    def decide_topk_classes(self, mu, sd, best, selected, rates, overheads,
+                            k: int | None = None):
+        """Per-device-class global EIrate top-k for the joint batched
+        assignment: ``(values (C, k), global ids (C, k))``, one row per
+        class in ``rates``/``overheads`` (cost row c = cost/rate_c +
+        overhead_c).  ``k`` defaults to ``self.topk``; a k-device batch
+        passes k = batch size so the greedy solver never runs dry."""
+        if self._member is None:
+            raise RuntimeError("refresh() must run before decide()")
+        k = self.topk if k is None else max(1, k)
+        mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
+        sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
+        sel = self._pad(np.asarray(selected), True, bool)
+        return _decide_classes(
+            mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
+            self._cost, sel, jnp.asarray(rates, dtype=jnp.float32),
+            jnp.asarray(overheads, dtype=jnp.float32),
+            mesh=self.mesh, kernel=self.kernel, k=k)
 
     def readout_decide_topk(self, W, alpha, mu0, kdiag, best, selected,
                             speed: float = 1.0):

@@ -16,15 +16,22 @@ offline simulators use; with churn disabled the engine reproduces
 Long-running services recycle model/tenant slots and can run the scoring
 pass across a device mesh (``scorer="sharded"``, ``repro.shardgp``) with an
 identical decision sequence (tests/test_shardgp.py).  See DESIGN.md §9–§10.
+The *device* side goes elastic in ``repro.devplane``: device classes,
+DeviceJoin/Leave/Preempt churn, autoscale, and joint batched (device,
+model) assignment — DESIGN.md §11.
 """
 
 from .engine import StreamEngine, StreamResult, StreamTrial  # noqa: F401
 from .telemetry import TelemetrySink  # noqa: F401
 from .workload import (  # noqa: F401
     ChurnTrace,
+    DeviceJoin,
+    DeviceLeave,
+    DevicePreempt,
     SliceFail,
     TenantArrive,
     TenantDepart,
+    device_churn_trace,
     poisson_churn_trace,
     trace_from_problem,
 )

@@ -94,6 +94,8 @@ class StreamResult:
     telemetry: TelemetrySink
     tenants: dict[int, _TenantRuntime] = field(repr=False, default_factory=dict)
     compaction_moves: int = 0   # tenant blocks relocated by compact() passes
+    policy_launches: int = 0    # launches decided by the policy (not warm
+                                # start) — the decision-cost denominator
 
     @property
     def observations(self) -> list[tuple[float, int, float]]:
@@ -105,6 +107,8 @@ class StreamResult:
 
 class StreamEngine:
     """Online multi-tenant GP-EI service over a Fleet (module docstring)."""
+
+    LAUNCH_ORDERS = ("lifo", "fastest")
 
     def __init__(
         self,
@@ -119,12 +123,17 @@ class StreamEngine:
         score_kernel: str = "xla",
         compact_every: int | None = None,
         compact_imbalance: float | None = None,
+        launch_order: str = "lifo",
         telemetry: TelemetrySink | None = None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        if launch_order not in self.LAUNCH_ORDERS:
+            raise ValueError(f"launch_order must be one of "
+                             f"{self.LAUNCH_ORDERS}, got {launch_order!r}")
         self.fleet = fleet
         self.policy = policy
+        self.launch_order = launch_order
         self.warm_start = warm_start
         self.max_live_models = max_live_models
         self.compact_every = compact_every
@@ -153,6 +162,7 @@ class StreamEngine:
         self._t = 0.0
         self._decisions = 0
         self._decision_seconds = 0.0
+        self._policy_launches = 0
         self._compaction_moves = 0
 
     # ---- event plumbing ----------------------------------------------------
@@ -258,7 +268,7 @@ class StreamEngine:
         tr = self._tenants[t.tenant_key]
         if tr.departed:
             self.telemetry.on_rejected_observation(
-                self._t, tr.key, t.end - t.start)
+                self._t, tr.key, t.end - t.start, device=device)
         else:
             z = float(tr.arrive.z_true[t.local_model])
             self._trials[ti] = StreamTrial(
@@ -266,9 +276,32 @@ class StreamEngine:
                 t.device, t.start, t.end, z)
             self.cp.record_observation(model, z)
             self.telemetry.on_observation(
-                self._t, tr.key, model, z, t.end - t.start)
+                self._t, tr.key, model, z, t.end - t.start, device=device)
         self.fleet.slices[device].current_trial = None
         self._free.append(device)
+
+    def _kill_trial(self, killed_ti: int, *, preempted: bool = False) -> None:
+        """Shared bookkeeping for a trial dying before observation (slice
+        failure, device leave, preemption): cancel its pending completion,
+        rewrite the record as unobserved, and return the model to
+        L \\ L(t) — it was never observed, the paper's failure rule."""
+        self._cancelled.add(killed_ti)
+        t = self._trials[killed_ti]
+        self._trials[killed_ti] = StreamTrial(
+            t.model, t.tenant_key, t.local_model, t.user_hint,
+            t.device, t.start, self._t, None)
+        owner = self._tenants[t.tenant_key]
+        if not owner.departed:
+            # never observed => the model returns to L \ L(t)
+            self.cp.record_failure(t.model)
+        if preempted:
+            self.telemetry.on_preemption(
+                self._t, t.tenant_key, t.model, self._t - t.start,
+                device=t.device)
+        else:
+            self.telemetry.on_trial_failed(
+                self._t, t.tenant_key, t.model, self._t - t.start,
+                device=t.device)
 
     def _handle_slice_fail(self, slice_id: int, downtime: float) -> None:
         s = self.fleet.slices[slice_id]
@@ -276,80 +309,131 @@ class StreamEngine:
             return                       # already down; one repair is pending
         killed_ti = self.fleet.fail(slice_id)
         if killed_ti is not None:
-            self._cancelled.add(killed_ti)
-            t = self._trials[killed_ti]
-            self._trials[killed_ti] = StreamTrial(
-                t.model, t.tenant_key, t.local_model, t.user_hint,
-                t.device, t.start, self._t, None)
-            owner = self._tenants[t.tenant_key]
-            if not owner.departed:
-                # never observed => the model returns to L \ L(t)
-                self.cp.record_failure(t.model)
-            self.telemetry.on_trial_failed(
-                self._t, t.tenant_key, t.model, self._t - t.start)
+            self._kill_trial(killed_ti)
         elif slice_id in self._free:
             self._free.remove(slice_id)
         self._push(self._t + downtime, "recover", (slice_id,))
 
     def _handle_recover(self, slice_id: int) -> None:
-        self.fleet.recover(slice_id)
         s = self.fleet.slices[slice_id]
+        if s.retired:
+            return                       # left the fleet while down
+        self.fleet.recover(slice_id)
         if s.current_trial is None and slice_id not in self._free:
             self._free.append(slice_id)
 
     # ---- the launch loop (mirrors scheduler.simulate.try_launch) -----------
 
+    def _pick_free_index(self) -> int:
+        """Index into ``self._free`` of the next slice to launch on.
+
+        ``launch_order="lifo"`` is the historical stack pop (top of stack);
+        ``"fastest"`` picks the fastest free slice — ties resolve to the
+        most recently freed (the stack top among the tied), so on a
+        homogeneous fleet the two orders are byte-identical and the replay
+        equivalence contract is untouched (tests/test_stream.py)."""
+        if self.launch_order == "lifo" or len(self._free) == 1:
+            return len(self._free) - 1
+        speeds = [self.fleet.slices[d].speed for d in self._free]
+        best = max(speeds)
+        for i in range(len(self._free) - 1, -1, -1):
+            if speeds[i] == best:
+                return i
+        raise AssertionError("unreachable: _free is non-empty")
+
+    def _launch_on(self, i: int, model: int, hint: int) -> None:
+        """Commit one launch on free-list index ``i`` (shared bookkeeping
+        for the sequential and the devplane batched paths)."""
+        d = self._free.pop(i)
+        s = self.fleet.slices[d]
+        owner = self._owner_of_model[model]
+        dur = self._duration_on(model, s)
+        end = self._t + dur
+        self.cp.record_start(model)
+        ti = len(self._trials)
+        s.current_trial = ti
+        s.busy_until = end
+        self._trials.append(StreamTrial(
+            model, owner.key, model - owner.model_start, hint, d,
+            self._t, end, None))
+        self._push(end, "finish", (d, model, ti))
+        self.telemetry.on_launch(self._t, owner.key, model, d, dur)
+
+    def _duration_on(self, model: int, s) -> float:
+        """Trial duration of ``model`` on slice ``s`` — the rank-1
+        ``c(x)/speed_d``; the devplane engine overrides this with the
+        registry's 2-D per-class cost (DESIGN.md §11)."""
+        return float(self.cp.cost[model]) / s.speed
+
+    def _pop_pending_launch(self) -> bool:
+        """Consume exactly one warm-start queue entry: launch it on the
+        ``_pick_free_index`` slice, or drop it when stale.  Returns False
+        when the queue is empty.  Shared by the base and devplane launch
+        loops — the batched == sequential equivalence depends on the two
+        engines applying identical staleness guards."""
+        if not self._pending:
+            return False
+        i = self._pick_free_index()
+        key, model = self._pending.pop(0)
+        owner = self._tenants[key]
+        if owner.departed or self._owner_of_model.get(model) is not owner:
+            return True                  # tenant left / slot recycled meanwhile
+        if self.cp.selected[model]:
+            return True                  # observed or in flight meanwhile
+        self._launch_on(i, model, -2)
+        return True
+
     def _try_launch(self, horizon: float) -> None:
         while self._free:
             if self._t >= horizon:
                 return
-            d = self._free[-1]
-            s = self.fleet.slices[d]
-            if self._pending:
-                (key, model), hint = self._pending.pop(0), -2
-                owner = self._tenants[key]
-                if owner.departed or self._owner_of_model.get(model) is not owner:
-                    continue             # tenant left / slot recycled meanwhile
-                if self.cp.selected[model]:
-                    continue             # observed or in flight meanwhile
-            else:
-                t0 = _time.perf_counter()
-                pick = self._chooser(device_speed=s.speed)
-                self._decision_seconds += _time.perf_counter() - t0
-                self._decisions += 1
-                if pick is None:
-                    return
-                model, hint = pick
-            self._free.pop()
-            owner = self._owner_of_model[model]
-            dur = float(self.cp.cost[model]) / s.speed
-            end = self._t + dur
-            self.cp.record_start(model)
-            ti = len(self._trials)
-            s.current_trial = ti
-            s.busy_until = end
-            self._trials.append(StreamTrial(
-                model, owner.key, model - owner.model_start, hint, d,
-                self._t, end, None))
-            self._push(end, "finish", (d, model, ti))
-            self.telemetry.on_launch(self._t, owner.key, model, d, dur)
+            if self._pop_pending_launch():
+                continue
+            i = self._pick_free_index()
+            s = self.fleet.slices[self._free[i]]
+            t0 = _time.perf_counter()
+            pick = self._chooser(device_speed=s.speed)
+            self._decision_seconds += _time.perf_counter() - t0
+            self._decisions += 1
+            if pick is None:
+                return
+            model, hint = pick
+            self._policy_launches += 1
+            self._launch_on(i, model, hint)
 
     # ---- the loop ----------------------------------------------------------
+
+    def _ingest(self, ev) -> None:
+        """Schedule one external trace event.  The devplane engine extends
+        this with device lifecycle events (DeviceJoin/Leave/Preempt)."""
+        if isinstance(ev, TenantArrive):
+            tr = _TenantRuntime(key=ev.tenant_key, arrive=ev)
+            self._tenants[ev.tenant_key] = tr
+            self._push(ev.at, "arrive", (tr,))
+        elif isinstance(ev, TenantDepart):
+            self._push(ev.at, "depart", (ev.tenant_key,))
+        elif isinstance(ev, SliceFail):
+            self._push(ev.at, "slice_fail", (ev.slice_id, ev.downtime))
+        else:
+            raise TypeError(f"unknown trace event {ev!r}")
+
+    def _dispatch_extra(self, kind: str, payload: tuple) -> None:
+        """Handle an event kind the base engine does not know (devplane
+        device lifecycle).  Base: nothing is expected to land here."""
+        raise AssertionError(f"unknown event kind {kind!r}")
+
+    def _post_event(self, kind: str) -> None:
+        """Hook between event handling and the launch pass — the devplane
+        engine evaluates its autoscale policy here.  Base: no-op."""
 
     def run(self, trace: ChurnTrace, horizon: float = np.inf) -> StreamResult:
         """Replay one trace to completion (or ``horizon``) and return the
         trial log + telemetry.  A fresh engine per run."""
         for ev in trace:
-            if isinstance(ev, TenantArrive):
-                tr = _TenantRuntime(key=ev.tenant_key, arrive=ev)
-                self._tenants[ev.tenant_key] = tr
-                self._push(ev.at, "arrive", (tr,))
-            elif isinstance(ev, TenantDepart):
-                self._push(ev.at, "depart", (ev.tenant_key,))
-            elif isinstance(ev, SliceFail):
-                self._push(ev.at, "slice_fail", (ev.slice_id, ev.downtime))
-            else:
-                raise TypeError(f"unknown trace event {ev!r}")
+            self._ingest(ev)
+        for s in self.fleet.slices:
+            self.telemetry.on_device_join(0.0, s.slice_id, s.speed,
+                                          initial=True)
 
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
@@ -366,6 +450,9 @@ class StreamEngine:
                 self._handle_slice_fail(*payload)
             elif kind == "recover":
                 self._handle_recover(*payload)
+            else:
+                self._dispatch_extra(kind, payload)
+            self._post_event(kind)
             # simultaneous arrivals are admitted as one batch before any
             # launch — this is what makes the churn-free replay line up with
             # simulate()'s pre-built warm-start queue
@@ -381,4 +468,5 @@ class StreamEngine:
             end_time=self._t, decisions=self._decisions,
             decision_seconds=self._decision_seconds,
             telemetry=self.telemetry, tenants=self._tenants,
-            compaction_moves=self._compaction_moves)
+            compaction_moves=self._compaction_moves,
+            policy_launches=self._policy_launches)

@@ -8,7 +8,10 @@ them into the metrics a service operator watches:
     max-over-tenants / global-happiness regret);
   * fairness — time-since-served per tenant (gap between consecutive
     observations for the same tenant), distribution + worst case;
-  * device utilization — busy seconds / (M * elapsed);
+  * device utilization — busy seconds over in-service windows, per device
+    and fleet-wide, plus the *speed-weighted* fleet utilization
+    (Σ busy_d·speed_d / Σ window_d·speed_d) — on a heterogeneous fleet an
+    idle fast device hurts more than an idle slow one (DESIGN.md §11);
   * admission-queue depth over time (admission control backpressure);
   * time-to-first-observation per session, p50/p99.
 
@@ -38,6 +41,16 @@ class _TenantStats:
     serve_gaps: list[float] = field(default_factory=list)
 
 
+@dataclass
+class _DeviceStats:
+    joined: float
+    speed: float
+    left: float | None = None
+    busy_seconds: float = 0.0
+    trials: int = 0
+    initial: bool = False    # part of the t=0 fleet (vs a runtime join)
+
+
 def _pct(values, q) -> float | None:
     return float(np.percentile(values, q)) if len(values) else None
 
@@ -47,11 +60,13 @@ class TelemetrySink:
 
     def __init__(self):
         self.tenants: dict[int, _TenantStats] = {}
+        self.devices: dict[int, _DeviceStats] = {}
         self.queue_depth_samples: list[tuple[float, int]] = []
         self.busy_seconds = 0.0
         self.num_trials = 0
         self.num_failed_trials = 0
         self.num_rejected_observations = 0
+        self.num_preemptions = 0
         self.end_time = 0.0
         self.num_slices = 0
 
@@ -75,10 +90,42 @@ class TelemetrySink:
     def on_launch(self, t: float, tenant_key: int, model: int, device: int,
                   duration: float) -> None:
         self.num_trials += 1
+        ds = self.devices.get(device)
+        if ds is not None:
+            ds.trials += 1
+
+    # ---- device lifecycle (the elastic device plane, DESIGN.md §11) --------
+
+    def on_device_join(self, t: float, device: int, speed: float,
+                       initial: bool = False) -> None:
+        """A slice enters service (the engine registers the initial fleet
+        with ``initial=True`` at t=0; elastic joins as they land)."""
+        self.devices[device] = _DeviceStats(joined=t, speed=speed,
+                                            initial=initial)
+
+    def on_device_leave(self, t: float, device: int) -> None:
+        ds = self.devices.get(device)
+        if ds is not None:
+            ds.left = t
+
+    def on_preemption(self, t: float, tenant_key: int, model: int,
+                      busy_seconds: float, device: int | None = None) -> None:
+        """A trial was evicted by a preemption (counted separately from
+        failures; the occupied time still counts as busy)."""
+        self.num_preemptions += 1
+        self._add_busy(busy_seconds, device)
+
+    def _add_busy(self, seconds: float, device: int | None) -> None:
+        self.busy_seconds += seconds
+        if device is not None:
+            ds = self.devices.get(device)
+            if ds is not None:
+                ds.busy_seconds += seconds
 
     def on_observation(self, t: float, tenant_key: int, model: int,
-                       z: float, duration: float) -> None:
-        self.busy_seconds += duration
+                       z: float, duration: float,
+                       device: int | None = None) -> None:
+        self._add_busy(duration, device)
         st = self.tenants.get(tenant_key)
         if st is None:
             return
@@ -91,16 +138,17 @@ class TelemetrySink:
         st.best_z = max(st.best_z, z)
 
     def on_trial_failed(self, t: float, tenant_key: int, model: int,
-                        busy_seconds: float) -> None:
+                        busy_seconds: float, device: int | None = None) -> None:
         self.num_failed_trials += 1
-        self.busy_seconds += busy_seconds   # the slice was occupied until death
+        self._add_busy(busy_seconds, device)   # occupied until death
 
     def on_rejected_observation(self, t: float, tenant_key: int,
-                                duration: float) -> None:
+                                duration: float,
+                                device: int | None = None) -> None:
         """A trial finished after its tenant departed — result discarded,
         but the slice was busy for the full duration."""
         self.num_rejected_observations += 1
-        self.busy_seconds += duration
+        self._add_busy(duration, device)
 
     def on_end(self, t: float, num_slices: int) -> None:
         self.end_time = t
@@ -119,6 +167,24 @@ class TelemetrySink:
                        if st.departed is not None and st.admitted is None]
         queue_max = max((d for _, d in self.queue_depth_samples), default=0)
         elapsed = max(self.end_time, 1e-12)
+        # device windows: joined -> left (or end of run).  With the initial
+        # fleet registered at t=0 and no churn this denominator equals the
+        # legacy num_slices * elapsed.
+        windows = {d: max((ds.left if ds.left is not None else self.end_time)
+                          - ds.joined, 0.0)
+                   for d, ds in self.devices.items()}
+        wall = sum(windows.values())
+        if self.devices:
+            utilization = self.busy_seconds / max(wall, 1e-12)
+            speed_wall = sum(w * self.devices[d].speed
+                             for d, w in windows.items())
+            speed_busy = sum(ds.busy_seconds * ds.speed
+                             for ds in self.devices.values())
+            speed_weighted = speed_busy / max(speed_wall, 1e-12)
+        else:
+            utilization = (self.busy_seconds / (self.num_slices * elapsed)
+                           if self.num_slices else 0.0)
+            speed_weighted = None
         return {
             "sessions": len(self.tenants),
             "sessions_admitted": len(admitted),
@@ -126,11 +192,15 @@ class TelemetrySink:
             "sessions_departed_while_queued": len(left_queued),
             "trials": self.num_trials,
             "trials_failed": self.num_failed_trials,
+            "trials_preempted": self.num_preemptions,
             "observations_rejected_after_depart": self.num_rejected_observations,
             "end_time": self.end_time,
-            "device_utilization": (
-                self.busy_seconds / (self.num_slices * elapsed)
-                if self.num_slices else 0.0),
+            "device_utilization": utilization,
+            "speed_weighted_utilization": speed_weighted,
+            "devices_joined": sum(1 for ds in self.devices.values()
+                                  if not ds.initial),
+            "devices_left": sum(1 for ds in self.devices.values()
+                                if ds.left is not None),
             "queue_depth_max": queue_max,
             "ttfo_p50": _pct(ttfo, 50),
             "ttfo_p99": _pct(ttfo, 99),
@@ -156,8 +226,30 @@ class TelemetrySink:
             }
         return out
 
+    def per_device(self) -> dict[int, dict]:
+        """Per-device utilization: busy / in-service window, plus the
+        speed-weighted view (busy*speed / window*speed == plain utilization
+        per device; the *fleet* speed-weighted number in ``summary()`` is
+        where the weights matter)."""
+        out = {}
+        for d, ds in self.devices.items():
+            window = max((ds.left if ds.left is not None else self.end_time)
+                         - ds.joined, 0.0)
+            out[d] = {
+                "joined": ds.joined,
+                "left": ds.left,
+                "speed": ds.speed,
+                "trials": ds.trials,
+                "busy_seconds": ds.busy_seconds,
+                "utilization": ds.busy_seconds / window if window > 0 else 0.0,
+            }
+        return out
+
     def to_json(self, path: str | Path, include_tenants: bool = True) -> Path:
         payload = {"summary": self.summary()}
+        if self.devices:
+            payload["devices"] = {str(k): v
+                                  for k, v in self.per_device().items()}
         if include_tenants:
             payload["tenants"] = {str(k): v for k, v in self.per_tenant().items()}
         path = Path(path)

@@ -55,7 +55,38 @@ class SliceFail:
     downtime: float
 
 
-Event = TenantArrive | TenantDepart | SliceFail
+@dataclass(frozen=True)
+class DeviceJoin:
+    """A new device slice arrives at runtime (scale-up / spot grant).  The
+    engine appends it to the fleet — slice ids are append-only, so the
+    trace generator can predict the id of the k-th join as
+    ``initial_slices + k``."""
+    at: float
+    chips: int = 16
+    speed: float = 1.0
+    cls: str = "base"
+
+
+@dataclass(frozen=True)
+class DeviceLeave:
+    """Permanent decommission of a slice: the in-flight trial dies exactly
+    like a slice failure (its model returns to the unselected pool), but
+    the slice never recovers."""
+    at: float
+    slice_id: int
+
+
+@dataclass(frozen=True)
+class DevicePreempt:
+    """Spot-market / priority eviction: the in-flight trial is killed and
+    re-queued like a slice failure, but the slice stays healthy and is
+    immediately schedulable again (no downtime)."""
+    at: float
+    slice_id: int
+
+
+Event = (TenantArrive | TenantDepart | SliceFail
+         | DeviceJoin | DeviceLeave | DevicePreempt)
 
 
 @dataclass(frozen=True)
@@ -159,6 +190,89 @@ def poisson_churn_trace(
     return ChurnTrace(
         events=tuple(events),
         name=name or f"poisson-{num_sessions}sessions-s{seed}")
+
+
+def device_churn_trace(
+    num_sessions: int = 200,
+    arrival_rate: float = 1.0,
+    seed: int = 0,
+    *,
+    initial_slices: int = 8,
+    join_classes: tuple[tuple[str, int, float], ...] = (("base", 16, 1.0),),
+    join_rate: float = 0.0,
+    leave_rate: float = 0.0,
+    preempt_rate: float = 0.0,
+    device_seed: int | None = None,
+    name: str | None = None,
+    **tenant_kw,
+) -> ChurnTrace:
+    """Tenant churn *plus* device churn, both seeded (DESIGN.md §11).
+
+    The tenant side is exactly :func:`poisson_churn_trace` (same seed =>
+    bit-identical tenant events); the device side overlays three Poisson
+    processes across the arrival window:
+
+      * joins at ``join_rate`` — each draws a ``(cls, chips, speed)`` from
+        ``join_classes`` uniformly; the k-th join will occupy slice id
+        ``initial_slices + k`` (ids are append-only);
+      * leaves at ``leave_rate`` — each picks a uniformly random slice that
+        still exists (initial or joined, not yet left);
+      * preempts at ``preempt_rate`` — each picks a uniformly random
+        not-yet-left slice (the engine tolerates a preempt racing a leave).
+
+    ``device_seed`` defaults to ``seed + 1`` so the device overlay never
+    perturbs the tenant stream.
+    """
+    base = poisson_churn_trace(num_sessions, arrival_rate, seed, **tenant_kw)
+    events: list[Event] = list(base.events)
+    # span the overlay over the ARRIVAL window (same convention as the
+    # SliceFail sprinkling), not the heavy-tailed depart horizon — Pareto
+    # session tails would otherwise inflate device churn by orders of
+    # magnitude after work has stopped arriving
+    horizon = max((e.at for e in events if isinstance(e, TenantArrive)),
+                  default=0.0)
+    rng = np.random.default_rng(seed + 1 if device_seed is None else device_seed)
+
+    dev_events: list[Event] = []
+    for rate, kind in ((join_rate, "join"), (leave_rate, "leave"),
+                       (preempt_rate, "preempt")):
+        if rate <= 0:
+            continue
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= horizon:
+                break
+            dev_events.append((t, kind))
+    dev_events.sort(key=lambda e: e[0])
+
+    # replay the device population to give leaves/preempts valid targets
+    alive = list(range(initial_slices))
+    next_id = initial_slices
+    out: list[Event] = []
+    for t, kind in dev_events:
+        if kind == "join":
+            cls, chips, speed = join_classes[int(rng.integers(len(join_classes)))]
+            out.append(DeviceJoin(at=t, chips=chips, speed=float(speed),
+                                  cls=cls))
+            alive.append(next_id)
+            next_id += 1
+        elif kind == "leave":
+            if len(alive) <= 1:
+                continue            # never drain the fleet entirely
+            sid = alive.pop(int(rng.integers(len(alive))))
+            out.append(DeviceLeave(at=t, slice_id=sid))
+        else:
+            if not alive:
+                continue
+            sid = alive[int(rng.integers(len(alive)))]
+            out.append(DevicePreempt(at=t, slice_id=sid))
+
+    events.extend(out)
+    events.sort(key=lambda e: e.at)
+    return ChurnTrace(
+        events=tuple(events),
+        name=name or f"devchurn-{num_sessions}sessions-s{seed}")
 
 
 def trace_from_problem(problem: Problem, at: float = 0.0) -> ChurnTrace:

@@ -1,0 +1,93 @@
+"""Direct coverage for the roofline cost model (core/cost_model.py).
+
+Previously only exercised indirectly through test_service / test_launch;
+these tests pin the three behaviors the device plane now leans on: the
+analytic fallback when no probe JSON exists, chips -> step-time scaling,
+and the measured-duration EMA blend (Remark 1's "historical data")."""
+
+import json
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import REFERENCE_CHIPS, CostModel
+
+ARCH, SHAPE = "olmo-1b", "train_4k"
+
+
+# --- analytic fallback --------------------------------------------------------
+
+def test_analytic_fallback_when_no_probe(tmp_path, monkeypatch):
+    """No probe JSON for the cell => the analytic roofline answers, and it
+    is positive and finite."""
+    monkeypatch.setattr(cm, "DRYRUN_DIR", tmp_path)   # guaranteed empty
+    m = CostModel()
+    assert m._probe(ARCH, SHAPE) is None
+    step = m.step_seconds(ARCH, SHAPE, chips=REFERENCE_CHIPS)
+    assert 0.0 < step < float("inf")
+    # trial cost = overhead + steps * step time
+    assert m.trial_seconds(ARCH, SHAPE, steps=10, overhead=30.0) == \
+        pytest.approx(30.0 + 10 * step)
+
+
+def test_probe_json_preferred_over_analytic(tmp_path, monkeypatch):
+    monkeypatch.setattr(cm, "DRYRUN_DIR", tmp_path)
+    cell = tmp_path / "pod16x16"
+    cell.mkdir()
+    (cell / f"{ARCH}__{SHAPE}__default__probe.json").write_text(json.dumps(
+        {"compute_seconds": 0.5, "memory_seconds": 0.2,
+         "collective_seconds": 0.1}))
+    m = CostModel()
+    # the roofline max of the probe terms at reference chips
+    assert m.step_seconds(ARCH, SHAPE, chips=REFERENCE_CHIPS) == \
+        pytest.approx(0.5)
+    # fewer chips => proportionally more per-chip work
+    assert m.step_seconds(ARCH, SHAPE, chips=REFERENCE_CHIPS // 4) == \
+        pytest.approx(2.0)
+
+
+# --- chips scaling ------------------------------------------------------------
+
+def test_step_time_monotone_in_chips(tmp_path, monkeypatch):
+    """More chips per slice => strictly smaller step time (both the compute
+    and the memory roofline terms scale with the slice size)."""
+    monkeypatch.setattr(cm, "DRYRUN_DIR", tmp_path)
+    m = CostModel()
+    steps = [m.step_seconds(ARCH, SHAPE, chips=c) for c in (16, 32, 64, 256)]
+    assert all(a > b for a, b in zip(steps, steps[1:]))
+
+
+def test_class_trial_seconds_affine_overhead(tmp_path, monkeypatch):
+    """The device-class route: speed divides the step term only — the fixed
+    overhead is host-bound — so the per-class cost is affine, not rank-1."""
+    monkeypatch.setattr(cm, "DRYRUN_DIR", tmp_path)
+    m = CostModel()
+    slow = m.class_trial_seconds(ARCH, SHAPE, 10, chips=64, speed=1.0,
+                                 overhead=30.0)
+    fast = m.class_trial_seconds(ARCH, SHAPE, 10, chips=64, speed=2.0,
+                                 overhead=30.0)
+    assert fast - 30.0 == pytest.approx((slow - 30.0) / 2.0)
+    assert fast > 30.0                      # overhead never disappears
+    with pytest.raises(ValueError):
+        m.class_trial_seconds(ARCH, SHAPE, 10, chips=64, speed=0.0)
+
+
+# --- measured-duration EMA blend ----------------------------------------------
+
+def test_observe_ema_and_blend(tmp_path, monkeypatch):
+    monkeypatch.setattr(cm, "DRYRUN_DIR", tmp_path)
+    m = CostModel()
+    base = m.trial_seconds(ARCH, SHAPE, steps=10, chips=64)
+    # first observation seeds the EMA at the measured value
+    m.observe(ARCH, SHAPE, 64, 100.0)
+    assert m._measured[(ARCH, SHAPE, 64)] == pytest.approx(100.0)
+    # second observation: EMA with weight 0.5
+    m.observe(ARCH, SHAPE, 64, 50.0)
+    assert m._measured[(ARCH, SHAPE, 64)] == pytest.approx(75.0)
+    # estimate blends analytic and measured with measured_blend
+    est = m.trial_seconds(ARCH, SHAPE, steps=10, chips=64)
+    assert est == pytest.approx(0.5 * base + 0.5 * 75.0)
+    # other (arch, shape, chips) keys are untouched
+    assert m.trial_seconds(ARCH, SHAPE, steps=10, chips=128) == \
+        pytest.approx(m.trial_seconds(ARCH, SHAPE, steps=10, chips=128))
+    assert (ARCH, SHAPE, 128) not in m._measured

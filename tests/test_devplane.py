@@ -1,0 +1,442 @@
+"""Elastic device plane: device churn, 2-D costs, joint batched assignment
+(DESIGN.md §11)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ControlPlane, simulate, synthetic_matern_problem
+from repro.core.fleet import Fleet
+from repro.devplane import (
+    AutoscalePolicy,
+    DeviceClass,
+    DeviceClassRegistry,
+    DevPlaneEngine,
+    greedy_assign,
+    two_class_registry,
+)
+from repro.stream import (
+    DeviceJoin,
+    DeviceLeave,
+    DevicePreempt,
+    ChurnTrace,
+    StreamEngine,
+    TenantArrive,
+    device_churn_trace,
+    poisson_churn_trace,
+    trace_from_problem,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return synthetic_matern_problem(num_users=6, num_models_per_user=8, seed=3)
+
+
+def fleet_of(n):
+    return Fleet.partition_pod(total_chips=16 * n, num_slices=n)
+
+
+def _tiny_tenant(key, at, m=3, seed=0, cost=None):
+    rng = np.random.default_rng(seed)
+    K = 0.04 * np.eye(m) + 0.01
+    return TenantArrive(
+        at=at, tenant_key=key, K_block=K, mu0=np.full(m, 0.5),
+        cost=np.ones(m) if cost is None else np.asarray(cost, float),
+        z_true=rng.uniform(0.2, 0.9, m))
+
+
+def _seq(res):
+    return [(t.model, t.device, t.start, t.end) for t in res.trials]
+
+
+# --- equivalence ladder -------------------------------------------------------
+
+@pytest.mark.parametrize("num_devices", [1, 3])
+def test_devplane_matches_stream_and_simulate(problem, num_devices):
+    """Satellite acceptance: static homogeneous fleet + empty device trace
+    => the devplane engine reproduces the StreamEngine (and transitively
+    scheduler.simulate) trial sequence exactly — batched assignment and
+    all."""
+    res = simulate(problem, "mdmt", num_devices=num_devices, seed=0)
+    sres = StreamEngine(fleet_of(num_devices), "mdmt", seed=0).run(
+        trace_from_problem(problem))
+    dres = DevPlaneEngine(fleet_of(num_devices), "mdmt", seed=0,
+                          assign="batched").run(trace_from_problem(problem))
+    assert _seq(dres) == _seq(sres)
+    assert [(t.model, t.device) for t in dres.trials] == \
+           [(t.model, t.device) for t in res.trials]
+    assert [t.z for t in dres.trials] == [t.z for t in sres.trials]
+
+
+@pytest.mark.parametrize("scorer", ["fused", "ops"])
+def test_batched_equals_sequential_on_homogeneous(scorer):
+    """The tentpole equivalence proof: one joint scoring pass + greedy
+    assignment picks the identical trial sequence to per-device sequential
+    argmaxes whenever the fleet is homogeneous — under full tenant churn."""
+    trace = poisson_churn_trace(num_sessions=30, arrival_rate=1.0, seed=0,
+                                m_min=2, m_max=10, session_scale=25.0)
+    runs = {}
+    for assign in ("batched", "sequential"):
+        eng = DevPlaneEngine(fleet_of(4), "mdmt", seed=0, assign=assign,
+                             scorer=scorer)
+        runs[assign] = eng.run(trace)
+    assert _seq(runs["batched"]) == _seq(runs["sequential"])
+    # and the batched path did its work in fewer scoring passes
+    assert runs["batched"].decisions <= runs["sequential"].decisions
+
+
+def test_batched_equals_sequential_with_overhead_class():
+    """Homogeneous extends to a single *class with overhead*: both modes
+    score with the same affine cost row, so the sequence still matches."""
+    reg = DeviceClassRegistry([DeviceClass("base", speed=1.0, overhead=0.7,
+                                           chip_scale=1.0)])
+    trace = poisson_churn_trace(num_sessions=20, arrival_rate=1.0, seed=2,
+                                m_min=2, m_max=8, session_scale=20.0)
+    runs = [DevPlaneEngine(reg.build_fleet([("base", 3)]), "mdmt", seed=0,
+                           registry=reg, assign=a).run(trace)
+            for a in ("batched", "sequential")]
+    assert _seq(runs[0]) == _seq(runs[1])
+
+
+def test_batched_beats_sequential_scoring_passes_on_waves():
+    """Uniform costs synchronize completions into waves, so the batched
+    path must make strictly fewer scoring passes per policy launch."""
+    trace = poisson_churn_trace(num_sessions=40, arrival_rate=2.0, seed=1,
+                                m_min=4, m_max=12, session_scale=30.0)
+    b = DevPlaneEngine(fleet_of(8), "mdmt", seed=0, assign="batched").run(trace)
+    s = DevPlaneEngine(fleet_of(8), "mdmt", seed=0, assign="sequential").run(trace)
+    assert _seq(b) == _seq(s)               # homogeneous: same sequence
+    assert b.policy_launches == s.policy_launches > 0
+    assert b.decisions < s.decisions        # strictly fewer passes
+
+
+# --- 2-D cost structure -------------------------------------------------------
+
+def test_registry_cost_matrix_is_not_rank_one():
+    """With per-class overheads the (class x model) cost matrix cannot be
+    factorized as c(x)/speed_d — the per-model ratio between class rows is
+    not constant."""
+    reg = two_class_registry(2.0, overhead=5.0)
+    base = np.array([1.0, 10.0, 100.0])
+    m = reg.cost_matrix(base, ["slow", "fast"])
+    ratios = m[0] / m[1]
+    assert ratios.std() > 1e-3              # rank-1 would make these equal
+    # zero overhead degenerates back to rank-1
+    reg0 = two_class_registry(2.0, overhead=0.0)
+    m0 = reg0.cost_matrix(base, ["slow", "fast"])
+    np.testing.assert_allclose(m0[0] / m0[1], 2.0)
+
+
+def test_registry_memory_gate_and_fleet_factory():
+    reg = DeviceClassRegistry([
+        DeviceClass("big", mem_gb=64.0, chip_scale=1.0),
+        DeviceClass("small", mem_gb=8.0, chip_scale=1.0),
+    ])
+    m = reg.cost_matrix(np.ones(3), ["big", "small"],
+                        model_mem_gb=[1.0, 16.0, 100.0])
+    assert np.isposinf(m[1, 1]) and np.isposinf(m[0, 2]) and np.isposinf(m[1, 2])
+    assert np.isfinite(m[0, :2]).all() and np.isfinite(m[1, 0])
+    fleet = reg.build_fleet([("big", 2), ("small", 1)])
+    assert [s.cls for s in fleet.slices] == ["big", "big", "small"]
+    with pytest.raises(KeyError):
+        reg["nope"]
+    with pytest.raises(ValueError):
+        reg.register(DeviceClass("big"))
+
+
+def test_infinite_cost_is_hard_exclusion_in_class_scores():
+    """The memory gate's +inf cost must score -inf (never assigned), not
+    the 0 a naive division would give — 0 could still win a row whose
+    fitting candidates all have zero EI."""
+    import jax.numpy as jnp
+    from repro.core.ei import eirate_class_scores
+    mu = jnp.zeros(3); sd = jnp.zeros(3)
+    best = jnp.array([10.0])                 # EI of every model is 0
+    mem = jnp.ones((1, 3), bool)
+    cm = jnp.array([[1.0, jnp.inf, 1.0]])
+    sel = jnp.zeros(3, bool)
+    s = np.asarray(eirate_class_scores(mu, sd, best, mem, cm, sel))
+    assert s[0, 0] == 0.0 and s[0, 2] == 0.0
+    assert np.isneginf(s[0, 1])
+
+
+def test_device_join_speed_must_match_registry():
+    reg = two_class_registry(2.0)
+    trace = ChurnTrace((_tiny_tenant(0, at=0.0),
+                        DeviceJoin(at=1.0, chips=16, speed=3.0, cls="fast")))
+    eng = DevPlaneEngine(reg.build_fleet([("slow", 1), ("fast", 1)]),
+                         "mdmt", seed=0, registry=reg)
+    with pytest.raises(ValueError, match="disagrees"):
+        eng.run(trace)
+
+
+def test_autoscale_policy_reuse_across_engines_is_fresh():
+    """One policy object driving two engines must not leak the cooldown
+    clock between runs (the engine takes a private copy)."""
+    ta = _tiny_tenant(0, at=0.0, m=20, cost=np.full(20, 5.0))
+    policy = AutoscalePolicy(high_backlog=4.0, low_backlog=1.0, cooldown=5.0,
+                             join_class="base", max_devices=4)
+    runs = []
+    for _ in range(2):
+        eng = DevPlaneEngine(fleet_of(1), "mdmt", seed=0, autoscale=policy)
+        res = eng.run(ChurnTrace((ta,)))
+        runs.append((eng._autoscale_joins, eng._autoscale_leaves,
+                     [(t.model, t.device, t.start) for t in res.trials]))
+    assert runs[0] == runs[1]
+    assert policy._last_action == float("-inf")   # caller's object untouched
+
+
+def test_choose_mdmt_batch_head_matches_sequential_pick(problem):
+    """Row 0 of a 1-class batch == choose_mdmt, over several steps."""
+    a = ControlPlane.from_problem(problem)
+    b = ControlPlane.from_problem(problem)
+    for _ in range(8):
+        pick = a.choose_mdmt()
+        vals, gids = b.choose_mdmt_batch(np.ones(1), np.zeros(1), k=3)
+        assert pick[0] == int(gids[0, 0])
+        z = float(problem.z_true[pick[0]])
+        for cp in (a, b):
+            cp.record_start(pick[0]); cp.record_observation(pick[0], z)
+
+
+# --- greedy solver ------------------------------------------------------------
+
+def test_greedy_assign_homogeneous_is_rank_order():
+    vals = np.array([[5.0, 4.0, 3.0, 2.0]])
+    ids = np.array([[7, 3, 9, 1]])
+    out = greedy_assign(vals, ids, [0, 0, 0])
+    assert out == [(0, 7), (1, 3), (2, 9)]
+
+
+def test_greedy_assign_fast_device_outbids_slow():
+    # model 7 scores 10 on class 1 (fast) and 5 on class 0 (slow):
+    # the fast device takes it, the slow device falls back to model 3
+    vals = np.array([[5.0, 2.0], [10.0, 1.0]])
+    ids = np.array([[7, 3], [7, 8]])
+    out = greedy_assign(vals, ids, [0, 1])   # device 0 slow, device 1 fast
+    assert out == [(1, 7), (0, 3)]
+
+
+def test_greedy_assign_exhaustion_and_floor():
+    vals = np.array([[5.0, -1e30]])
+    ids = np.array([[2, 0]])
+    out = greedy_assign(vals, ids, [0, 0, 0])
+    assert out == [(0, 2)]                   # one candidate, one launch
+
+
+# --- device lifecycle ---------------------------------------------------------
+
+def test_device_join_expands_service():
+    ta = _tiny_tenant(0, at=0.0, m=6, cost=np.full(6, 4.0))
+    trace = ChurnTrace((ta, DeviceJoin(at=1.0, chips=16, speed=1.0,
+                                       cls="base")))
+    res = DevPlaneEngine(fleet_of(1), "mdmt", seed=0).run(trace)
+    assert res.num_devices == 2
+    assert any(t.device == 1 for t in res.trials)    # the joined slice served
+    obs = {t.local_model for t in res.trials if t.z is not None}
+    assert obs == set(range(6))
+    dev = res.telemetry.per_device()
+    assert dev[1]["joined"] == 1.0 and dev[1]["trials"] > 0
+
+
+def test_device_leave_kills_and_requeues():
+    ta = _tiny_tenant(0, at=0.0, m=3, cost=np.full(3, 4.0))
+    trace = ChurnTrace((ta, DeviceLeave(at=1.0, slice_id=1)))
+    res = DevPlaneEngine(fleet_of(2), "mdmt", seed=0).run(trace)
+    killed = [t for t in res.trials if t.z is None]
+    assert len(killed) == 1 and killed[0].device == 1 and killed[0].end == 1.0
+    # the killed model is re-issued on the surviving slice and observed
+    obs = {t.local_model for t in res.trials if t.z is not None}
+    assert obs == set(range(3))
+    assert all(t.device == 0 for t in res.trials if t.start > 1.0)
+    assert res.num_devices == 1
+    assert res.telemetry.summary()["devices_left"] == 1
+    assert res.telemetry.per_device()[1]["left"] == 1.0
+
+
+def test_preempt_requeues_like_slice_failure_but_no_downtime():
+    ta = _tiny_tenant(0, at=0.0, m=3, cost=np.full(3, 4.0))
+    trace = ChurnTrace((ta, DevicePreempt(at=1.0, slice_id=0)))
+    res = DevPlaneEngine(fleet_of(1), "mdmt", seed=0).run(trace)
+    s = res.telemetry.summary()
+    assert s["trials_preempted"] == 1 and s["trials_failed"] == 0
+    pre = [t for t in res.trials if t.z is None]
+    assert len(pre) == 1 and pre[0].end == 1.0
+    # the slice relaunches IMMEDIATELY (no downtime) — next start at t=1.0
+    restarts = [t for t in res.trials if t.start == 1.0]
+    assert len(restarts) == 1
+    # the preempted model returns to the pool and is eventually observed
+    obs = {t.local_model for t in res.trials if t.z is not None}
+    assert obs == set(range(3))
+
+
+def test_leave_then_recover_race_stays_retired():
+    """A slice that fails, then leaves while down, must not rejoin when the
+    pending repair fires."""
+    from repro.stream import SliceFail
+    ta = _tiny_tenant(0, at=0.0, m=4, cost=np.full(4, 10.0))
+    trace = ChurnTrace((ta, SliceFail(at=1.0, slice_id=0, downtime=2.0),
+                        DeviceLeave(at=2.0, slice_id=0)))
+    res = DevPlaneEngine(fleet_of(2), "mdmt", seed=0).run(trace)
+    assert res.num_devices == 1
+    assert all(t.device == 1 for t in res.trials if t.start > 1.0)
+
+
+# --- autoscale ----------------------------------------------------------------
+
+def test_autoscale_joins_under_backlog_and_retires_when_idle():
+    ta = _tiny_tenant(0, at=0.0, m=20, cost=np.full(20, 5.0))
+    policy = AutoscalePolicy(high_backlog=4.0, low_backlog=1.0, cooldown=0.0,
+                             join_class="base", min_devices=1, max_devices=4)
+    trace = ChurnTrace((ta,))
+    eng = DevPlaneEngine(fleet_of(1), "mdmt", seed=0, autoscale=policy)
+    res = eng.run(trace)
+    assert eng._autoscale_joins > 0
+    assert eng._autoscale_leaves > 0         # drained backlog => scale down
+    assert 1 <= res.num_devices <= 4
+    obs = {t.local_model for t in res.trials if t.z is not None}
+    assert obs == set(range(20))             # elasticity never loses work
+    s = res.telemetry.summary()
+    assert s["devices_joined"] == eng._autoscale_joins
+    assert s["devices_left"] == eng._autoscale_leaves
+
+
+def test_autoscale_bounds_validated():
+    with pytest.raises(ValueError):
+        AutoscalePolicy(high_backlog=1.0, low_backlog=2.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_devices=0)
+    with pytest.raises(ValueError):
+        DevPlaneEngine(fleet_of(1), "mdmt",
+                       autoscale=AutoscalePolicy(join_class="nope"))
+
+
+# --- end-to-end heterogeneous churn ------------------------------------------
+
+def test_device_churn_trace_end_to_end_consistency():
+    """Tenant + device churn together: per-tenant observations stay unique,
+    preemptions and leaves are all accounted, telemetry windows close."""
+    reg = two_class_registry(2.0, overhead=0.5)
+    fleet = reg.build_fleet([("slow", 2), ("fast", 2)])
+    trace = device_churn_trace(
+        num_sessions=40, arrival_rate=1.0, seed=1, initial_slices=4,
+        join_classes=(("fast", 16, 2.0), ("slow", 16, 1.0)),
+        join_rate=0.05, leave_rate=0.03, preempt_rate=0.05,
+        m_min=2, m_max=10, session_scale=25.0)
+    eng = DevPlaneEngine(fleet, "mdmt", seed=0, registry=reg,
+                         launch_order="fastest", max_live_models=80)
+    res = eng.run(trace)
+    s = res.telemetry.summary()
+    assert s["sessions"] == 40 and s["trials"] > 40
+    seen = [(t.tenant_key, t.local_model) for t in res.trials
+            if t.z is not None]
+    assert len(seen) == len(set(seen))
+    # durations follow the 2-D cost: every trial on a fast slice of base
+    # cost c lasted overhead + c/2, on a slow one overhead + c
+    for t in res.trials:
+        sl = eng.fleet.slices[t.device]
+        base = None
+        tr = res.tenants[t.tenant_key]
+        if tr.model_start is not None:
+            base = float(tr.arrive.cost[t.local_model])
+        if base is not None and t.z is not None:
+            want = reg[sl.cls].cost_on(base)
+            assert t.end - t.start == pytest.approx(float(want))
+    assert s["speed_weighted_utilization"] is not None
+    # every device window is closed and non-negative
+    for d in res.telemetry.per_device().values():
+        assert d["busy_seconds"] >= 0.0 and d["utilization"] <= 1.0 + 1e-9
+
+
+# --- sharded scorer drives the batched assignment (multi-device) --------------
+
+def test_sharded_class_decision_matches_dense_4dev():
+    """On a forced 4-device mesh: ShardedScorer.decide_topk_classes == the
+    dense choose_topk_classes (values to fp32 tolerance, ids exact), and a
+    full heterogeneous devplane episode with scorer="sharded" picks the
+    identical trial sequence as scorer="fused" — the 2-speed-class fleet
+    the CI hetero lane runs."""
+    from conftest import run_forced_devices_subprocess
+    res = run_forced_devices_subprocess("""
+        import json
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from repro.core.ei import choose_topk_classes
+        from repro.devplane import DevPlaneEngine, two_class_registry
+        from repro.shardgp import ShardedScorer
+        from repro.stream import device_churn_trace
+
+        rng = np.random.default_rng(0)
+        sc = ShardedScorer(4, topk=4)
+        ok_ids = ok_vals = checks = 0
+        for trial in range(10):
+            n = int(rng.integers(4, 41)) * 4
+            N = int(rng.integers(2, 7))
+            C = int(rng.integers(1, 4))
+            mu = rng.normal(size=n).astype(np.float32)
+            sd = np.abs(rng.normal(size=n)).astype(np.float32)
+            best = rng.normal(size=N).astype(np.float32)
+            mem = rng.random((N, n)) < (1.0 / N)
+            cost = rng.uniform(0.5, 2.0, n).astype(np.float32)
+            sel = rng.random(n) < 0.3
+            rates = rng.uniform(0.5, 4.0, C).astype(np.float32)
+            overs = rng.uniform(0.0, 1.0, C).astype(np.float32)
+            sc.refresh(mem, cost)
+            v_s, g_s = sc.decide_topk_classes(mu, sd, best, sel,
+                                              rates, overs, k=4)
+            cm = (jnp.asarray(cost)[None, :] / jnp.asarray(rates)[:, None]
+                  + jnp.asarray(overs)[:, None])
+            v_d, g_d = choose_topk_classes(
+                jnp.asarray(mu), jnp.asarray(sd), jnp.asarray(best),
+                jnp.asarray(mem), cm, jnp.asarray(sel), k=4)
+            checks += 1
+            ok_ids += bool((np.asarray(g_s) == np.asarray(g_d)).all())
+            ok_vals += bool(np.allclose(np.asarray(v_s), np.asarray(v_d),
+                                        atol=1e-5, rtol=1e-5))
+
+        reg = two_class_registry(2.0, overhead=0.5)
+        trace = device_churn_trace(
+            num_sessions=25, arrival_rate=1.0, seed=2, initial_slices=4,
+            join_classes=(("fast", 16, 2.0),), join_rate=0.03,
+            leave_rate=0.02, preempt_rate=0.03,
+            m_min=2, m_max=10, session_scale=20.0)
+        seqs = {}
+        for scorer in ("fused", "sharded"):
+            eng = DevPlaneEngine(
+                reg.build_fleet([("slow", 2), ("fast", 2)]), "mdmt",
+                seed=0, registry=reg, scorer=scorer, num_shards=4,
+                max_live_models=60)
+            r = eng.run(trace)
+            seqs[scorer] = [(t.tenant_key, t.local_model, t.device,
+                             round(t.start, 9), t.z) for t in r.trials]
+        print(json.dumps({
+            "devices": len(jax.devices()),
+            "checks": checks, "ok_ids": ok_ids, "ok_vals": ok_vals,
+            "num_trials": len(seqs["fused"]),
+            "equal": seqs["fused"] == seqs["sharded"],
+        }))
+    """, devices=4)
+    assert res["devices"] == 4
+    assert res["ok_ids"] == res["checks"] == 10
+    assert res["ok_vals"] == res["checks"]
+    assert res["num_trials"] > 25
+    assert res["equal"], "sharded class decisions diverged from dense"
+
+
+def test_speed_oblivious_mode_changes_only_scoring():
+    """speed_oblivious scores as if homogeneous but keeps real durations —
+    on a heterogeneous fleet the device-aware plane must not do worse on
+    makespan for the same closed workload."""
+    reg = two_class_registry(4.0)
+    fleet = reg.build_fleet([("slow", 1), ("fast", 1)])
+    ta = _tiny_tenant(0, at=0.0, m=12, seed=5,
+                      cost=np.linspace(2.0, 8.0, 12))
+    aware = DevPlaneEngine(reg.build_fleet([("slow", 1), ("fast", 1)]),
+                           "mdmt", seed=0, registry=reg,
+                           launch_order="fastest").run(ChurnTrace((ta,)))
+    obliv = DevPlaneEngine(fleet, "mdmt", seed=0, registry=reg,
+                           speed_oblivious=True).run(ChurnTrace((ta,)))
+    assert {t.local_model for t in aware.trials if t.z is not None} == \
+           {t.local_model for t in obliv.trials if t.z is not None}
+    assert aware.end_time <= obliv.end_time + 1e-9

@@ -55,6 +55,32 @@ def test_eirate_topk_epilogue_sweep(rng, n, N, k, bm, bu):
     assert (np.asarray(ik)[valid] == np.asarray(ir)[valid]).all()
 
 
+@pytest.mark.parametrize("n,N,C,bm,bu", [
+    (64, 8, 2, 64, 8), (200, 33, 3, 64, 16), (17, 3, 5, 256, 256),
+])
+def test_eirate_classes_kernel_sweep(rng, n, N, C, bm, bu):
+    """The class-axis epilogue (one (C, n) cost matrix, tenant sum
+    accumulated once) == the naive per-class reference, and row c ==
+    the single-class kernel run with cost row c."""
+    mu = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    sg = sg.at[: n // 4].set(0.0)
+    best = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    mem = jnp.asarray(rng.random((N, n)) < 0.4)
+    cm = jnp.asarray(rng.uniform(0.3, 3.0, (C, n)), jnp.float32)
+    sel = jnp.asarray(rng.random(n) < 0.25)
+    got = ops.eirate_classes(mu, sg, best, mem, cm, sel,
+                             block_models=bm, block_users=bu, interpret=True)
+    want = ref.eirate_classes_ref(mu, sg, best, mem, cm, sel)
+    assert got.shape == (C, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    row = ops.eirate(mu, sg, best, mem, cm[1], sel,
+                     block_models=bm, block_users=bu, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(row),
+                               atol=1e-6, rtol=1e-6)
+
+
 def test_eirate_topk_tie_break_lowest_index():
     """All-equal scores: the epilogue must rank candidates by ascending
     index across blocks, exactly like lax.top_k (the sharded argmax's

@@ -64,6 +64,52 @@ def test_no_churn_heterogeneous_speeds(problem):
            [(t.model, t.device) for t in res.trials]
 
 
+# --- launch order (fastest-free-first satellite) ------------------------------
+
+def test_fastest_launch_order_homogeneous_replay_byte_identical(problem):
+    """On a homogeneous fleet ``launch_order="fastest"`` ties back to the
+    stack top, so the full trial log is byte-identical to LIFO — under
+    tenant churn and failures, not just the frozen replay."""
+    trace = poisson_churn_trace(num_sessions=20, arrival_rate=1.0, seed=7,
+                                m_min=2, m_max=8, session_scale=20.0,
+                                num_failure_slices=1)
+    a = StreamEngine(fleet_of(3), "mdmt", seed=0).run(trace)
+    b = StreamEngine(fleet_of(3), "mdmt", seed=0,
+                     launch_order="fastest").run(trace)
+    assert [(t.model, t.device, t.start, t.end, t.z) for t in a.trials] == \
+           [(t.model, t.device, t.start, t.end, t.z) for t in b.trials]
+    # and the frozen replay still matches simulate exactly
+    res = simulate(problem, "mdmt", num_devices=3, seed=0)
+    c = StreamEngine(fleet_of(3), "mdmt", seed=0,
+                     launch_order="fastest").run(trace_from_problem(problem))
+    assert [(t.model, t.device) for t in c.trials] == \
+           [(t.model, t.device) for t in res.trials]
+
+
+def test_fastest_launch_order_improves_heterogeneous_makespan():
+    """Regression for the LIFO blind spot: with one model ready and both a
+    fast and a slow slice free, the stack pop lands it on the slow slice
+    (highest id = stack top); fastest-free-first lands it on the fast one
+    and strictly improves makespan."""
+    ta = TenantArrive(at=0.0, tenant_key=0, K_block=0.04 * np.eye(1) + 0.0,
+                      mu0=np.array([0.5]), cost=np.array([8.0]),
+                      z_true=np.array([0.7]))
+    fleet_kw = dict(total_chips=32, num_slices=2)
+    lifo = StreamEngine(Fleet.partition_pod(speeds=[4.0, 1.0], **fleet_kw),
+                        "mdmt", seed=0).run(ChurnTrace((ta,)))
+    fast = StreamEngine(Fleet.partition_pod(speeds=[4.0, 1.0], **fleet_kw),
+                        "mdmt", seed=0,
+                        launch_order="fastest").run(ChurnTrace((ta,)))
+    assert lifo.trials[0].device == 1 and lifo.end_time == pytest.approx(8.0)
+    assert fast.trials[0].device == 0 and fast.end_time == pytest.approx(2.0)
+    assert fast.end_time < lifo.end_time
+
+
+def test_launch_order_validated():
+    with pytest.raises(ValueError):
+        StreamEngine(fleet_of(1), "mdmt", launch_order="nope")
+
+
 # --- churn semantics ----------------------------------------------------------
 
 def _tiny_tenant(key, at, m=3, seed=0, z=None):
