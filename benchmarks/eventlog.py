@@ -1,0 +1,177 @@
+"""Event-sourced control plane costs (DESIGN.md §12) -> BENCH_eventlog.json.
+
+Four measurements:
+
+* ``eventlog_compact_full`` vs ``eventlog_compact_incremental`` — the
+  pause-bound claim: one stop-the-world ``compact()`` rebalance on a
+  churned 128-tenant plane, against the same rebalance split into
+  ``max_moves=1`` passes.  The figure of merit is the MAX per-pass pause —
+  the longest stall any single decision sees — which must sit strictly
+  below the full-compaction pause (asserted here, so a regression fails
+  the bench job before it reaches the committed baseline).
+
+* ``eventlog_snapshot`` / ``eventlog_restore`` — the price of durability
+  at a boundary: one full-state snapshot through ``checkpoint.store`` of a
+  churned streaming engine, and one ``recover()`` (arrays + GP replay)
+  from it.
+
+* ``eventlog_append_processed`` — the per-event write-through cost of the
+  durable log (vs the in-memory default, recorded in the same row).
+
+* ``eventlog_end_to_end_overhead`` — everything together: the same churn
+  trace replayed with durability off and with a durable log +
+  every-32-events snapshots; the derived figure is the percent overhead.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import ControlPlane
+from repro.core.fleet import Fleet
+from repro.core.tenancy import _matern_block_chol
+from repro.stream import EventLog, StreamEngine, poisson_churn_trace, recover
+
+from .common import FAST, emit, time_us
+
+
+def _churned_plane(tenants: int, m: int, shards: int) -> ControlPlane:
+    """The shard_scale compaction scenario: every other tenant retired, so
+    spans are skewed and many blocks are movable (and seeded, so the full
+    and incremental modes start from identical layouts)."""
+    K_block, _ = _matern_block_chol(m, 0.2, 0.04)
+    cp = ControlPlane(np.random.default_rng(0), model_capacity=tenants * m,
+                      tenant_capacity=tenants, num_shards=shards)
+    handles = [cp.add_tenant(K_block, np.zeros(m), np.ones(m))
+               for _ in range(tenants)]
+    rng = np.random.default_rng(1)
+    for h in handles:
+        g = int(h.models[rng.integers(m)])
+        cp.record_start(g)
+        cp.record_observation(g, float(rng.uniform()))
+    for t in range(0, tenants, 2):
+        cp.retire_tenant(t)
+    return cp
+
+
+def bench_compaction_modes() -> None:
+    tenants = 16 if FAST else 128
+    m, shards = 16, 8
+
+    cp = _churned_plane(tenants, m, shards)
+    t0 = time.perf_counter()
+    remap = cp.compact(1.05)
+    full_us = (time.perf_counter() - t0) * 1e6
+
+    cp2 = _churned_plane(tenants, m, shards)
+    pass_us: list[float] = []
+    moves = 0
+    while True:
+        t0 = time.perf_counter()
+        r = cp2.compact(1.05, max_moves=1)
+        dt = (time.perf_counter() - t0) * 1e6
+        if not r:
+            break
+        pass_us.append(dt)
+        moves += len(r)
+        assert len(pass_us) < 10 * tenants, "incremental compaction diverged"
+    inc_max = max(pass_us)
+
+    emit("eventlog_compact_full", full_us, tenants_live=tenants // 2,
+         moves=len(remap), shards=shards,
+         imbalance_after=f"{cp._layout.imbalance():.2f}")
+    emit("eventlog_compact_incremental", inc_max, tenants_live=tenants // 2,
+         passes=len(pass_us), moves=moves,
+         total_us=f"{sum(pass_us):.1f}",
+         max_over_full=f"{inc_max / full_us:.3f}",
+         imbalance_after=f"{cp2._layout.imbalance():.2f}")
+    # the pause-bound acceptance claim, enforced at measurement time — at
+    # full shapes only: a 16-tenant FAST pass moves too few blocks for the
+    # gap to clear CI timing noise (full-size margin is ~5x)
+    assert FAST or inc_max < full_us, (
+        f"incremental max pause {inc_max:.0f}us >= full pause {full_us:.0f}us")
+
+
+def _trace_and_factory():
+    sessions = 20 if FAST else 120
+    trace = poisson_churn_trace(
+        num_sessions=sessions, arrival_rate=1.0, seed=0,
+        m_min=2, m_max=16, session_scale=25.0, num_failure_slices=2)
+
+    def make(**kw):
+        return StreamEngine(Fleet.partition_pod(256, 8), "mdmt", seed=0,
+                            max_live_models=120, num_shards=4,
+                            compact_every=4, **kw)
+    return trace, make
+
+
+def bench_snapshot_restore_append() -> None:
+    trace, make = _trace_and_factory()
+    with tempfile.TemporaryDirectory() as d:
+        logdir, snapdir = Path(d) / "log", Path(d) / "snap"
+        eng = make(log=EventLog(logdir))
+        res = eng.run(trace)
+        eng.snapshot_root = str(snapdir)
+
+        iters = 3 if FAST else 10
+        snap_us = time_us(eng.save_snapshot, iters=iters, warmup=1)
+        eng.log.close()
+
+        log = EventLog.load(logdir)
+        restore_us = time_us(lambda: recover(make, str(snapdir), log),
+                             iters=iters, warmup=1)
+        live = int(np.count_nonzero(eng.cp.model_live))
+        emit("eventlog_snapshot", snap_us, events=eng.event_index,
+             trials=len(res.trials), live_models=live)
+        emit("eventlog_restore", restore_us, from_step=eng.event_index,
+             trials=len(res.trials), live_models=live)
+
+        durable = EventLog(Path(d) / "bench_log")
+        rec = (3, 12.5, "finish", [2, 57, 14])
+        n = 200 if FAST else 2000
+        us_durable = time_us(lambda: durable.append_processed(*rec),
+                             iters=n, warmup=10)
+        durable.close()
+        mem = EventLog()
+        us_mem = time_us(lambda: mem.append_processed(*rec),
+                         iters=n, warmup=10)
+        emit("eventlog_append_processed", us_durable,
+             in_memory_us=f"{us_mem:.2f}")
+
+
+def bench_end_to_end_overhead() -> None:
+    trace, make = _trace_and_factory()
+    t0 = time.perf_counter()
+    plain_eng = make()
+    plain_eng.run(trace)
+    plain_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        eng = make(log=EventLog(Path(d) / "log"),
+                   snapshot_root=str(Path(d) / "snap"), snapshot_every=32)
+        eng.run(trace)
+        durable_s = time.perf_counter() - t0
+        eng.log.close()
+        snapshots = len(list((Path(d) / "snap").glob("step_*")))
+
+    events = eng.event_index
+    emit("eventlog_end_to_end_overhead",
+         (durable_s - plain_s) / max(events, 1) * 1e6,
+         events=events, snapshots=snapshots,
+         plain_s=f"{plain_s:.2f}", durable_s=f"{durable_s:.2f}",
+         overhead_pct=f"{100 * (durable_s - plain_s) / plain_s:.1f}")
+
+
+def main() -> None:
+    bench_compaction_modes()
+    bench_snapshot_restore_append()
+    bench_end_to_end_overhead()
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,8 @@ Sections (default: all):
             XLA_FLAGS=--xla_force_host_platform_device_count=4)
   devchurn  elastic device plane: batched vs sequential assignment cost,
             device-aware vs speed-oblivious regret, autoscale (device_churn)
+  eventlog  event-sourced durability: incremental vs full compaction pause,
+            snapshot/restore/log-append cost (eventlog, DESIGN.md §12)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -44,14 +46,14 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "devchurn", "roofline")
+            "devchurn", "eventlog", "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
     "fig2": "fig2", "fig3": "fig3", "fig4": "fig4", "fig5": "fig5",
     "control": "control_plane", "stream": "stream_churn",
     "shard": "shard_scale", "devchurn": "device_churn",
-    "roofline": "roofline",
+    "eventlog": "eventlog", "roofline": "roofline",
 }
 
 
@@ -105,6 +107,8 @@ def main() -> None:
                 from . import shard_scale as m
             elif section == "devchurn":
                 from . import device_churn as m
+            elif section == "eventlog":
+                from . import eventlog as m
             elif section == "roofline":
                 from . import roofline as m
             else:

@@ -7,20 +7,65 @@ service-level telemetry — including per-device and speed-weighted
 utilization.  ``--device-churn`` switches to the elastic device plane
 (DESIGN.md §11): a 2-speed-class fleet with device joins/leaves/preemptions
 overlaid on the tenant churn, joint batched assignment, and an autoscaler.
+``--crash-at N`` demos the event-sourced crash recovery (DESIGN.md §12):
+the run is killed at processed event N, rebuilt from its durable log +
+newest snapshot, resumed, and compared against an uninterrupted run.
 Used by CI as a smoke test:
 
   PYTHONPATH=src python examples/streaming_service.py --events 50
   PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
+  PYTHONPATH=src python examples/streaming_service.py --events 50 --crash-at 40
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import tempfile
 import time
 
 from repro.core.fleet import Fleet
-from repro.stream import StreamEngine, device_churn_trace, poisson_churn_trace
+from repro.stream import (EventLog, FaultInjector, SimulatedCrash,
+                          StreamEngine, device_churn_trace,
+                          poisson_churn_trace, recover)
+
+
+def demo_crash_recovery(make_engine, trace, crash_at, ref_eng, ref_res):
+    """Kill a durable run at processed event ``crash_at``, recover from
+    the log + newest snapshot, resume, and verify the replay reproduces
+    the uninterrupted run (``ref_res``) exactly — the DESIGN.md §12 oracle,
+    live."""
+    with tempfile.TemporaryDirectory() as d:
+        logdir, snapdir = f"{d}/log", f"{d}/snapshots"
+        eng = make_engine(log=EventLog(logdir), snapshot_root=snapdir,
+                          snapshot_every=16,
+                          fault=FaultInjector(crash_at, "before"))
+        try:
+            eng.run(trace)
+            print(f"\n--crash-at {crash_at}: the run only processed "
+                  f"{eng.event_index} events — nothing to crash")
+            return
+        except SimulatedCrash as e:
+            print(f"\ncrash injected: {e}")
+        finally:
+            eng.log.close()
+
+        eng2, resumed_from = recover(make_engine, snapdir,
+                                     EventLog.load(logdir))
+        print(f"recovered from snapshot at event {resumed_from} "
+              f"(+ log replay); resuming...")
+        res2 = eng2.resume()
+
+        same_trials = ([dataclasses.astuple(t) for t in res2.trials]
+                       == [dataclasses.astuple(t) for t in ref_res.trials])
+        same_summary = (res2.telemetry.summary()
+                        == ref_res.telemetry.summary())
+        print(f"replayed {eng2.event_index - resumed_from} events: "
+              f"trials identical={same_trials}, "
+              f"telemetry identical={same_summary}")
+        assert same_trials and same_summary, \
+            "crash recovery diverged from the uninterrupted run"
 
 
 def main() -> None:
@@ -37,6 +82,11 @@ def main() -> None:
     p.add_argument("--device-churn", action="store_true",
                    help="elastic 2-speed-class fleet with device churn + "
                         "autoscale (repro.devplane)")
+    p.add_argument("--crash-at", type=int, default=None, metavar="N",
+                   help="kill the engine at processed event N, recover "
+                        "from the durable log + snapshots, resume, and "
+                        "verify the replay matches an uninterrupted run "
+                        "(DESIGN.md §12)")
     p.add_argument("--telemetry-json", default=None,
                    help="optional path for the full telemetry dump")
     args = p.parse_args()
@@ -59,26 +109,33 @@ def main() -> None:
     print(f"trace: {trace.name} ({trace.num_events} events, "
           f"{trace.num_sessions} sessions)")
 
-    if args.device_churn:
-        reg = two_class_registry(2.0, overhead=0.5, chips=32)
-        half = max(1, args.slices // 2)
-        fleet = reg.build_fleet([("slow", args.slices - half),
-                                 ("fast", half)])
-        eng = DevPlaneEngine(
-            fleet, args.policy, seed=args.seed, registry=reg,
-            assign="batched", launch_order="fastest",
-            autoscale=AutoscalePolicy(join_class="fast", cooldown=5.0,
-                                      max_devices=2 * args.slices),
-            max_live_models=args.max_live_models or None)
-    else:
+    def make_engine(**kw):
+        # a fresh engine (and fresh Fleet — it is mutated) per run: the
+        # crash demo needs one for the reference, crashed, and recovered runs
+        if args.device_churn:
+            reg = two_class_registry(2.0, overhead=0.5, chips=32)
+            half = max(1, args.slices // 2)
+            fleet = reg.build_fleet([("slow", args.slices - half),
+                                     ("fast", half)])
+            return DevPlaneEngine(
+                fleet, args.policy, seed=args.seed, registry=reg,
+                assign="batched", launch_order="fastest",
+                autoscale=AutoscalePolicy(join_class="fast", cooldown=5.0,
+                                          max_devices=2 * args.slices),
+                max_live_models=args.max_live_models or None, **kw)
         fleet = Fleet.partition_pod(total_chips=32 * args.slices,
                                     num_slices=args.slices)
-        eng = StreamEngine(
+        return StreamEngine(
             fleet, args.policy, seed=args.seed,
-            max_live_models=args.max_live_models or None)
+            max_live_models=args.max_live_models or None, **kw)
+
     t0 = time.perf_counter()
+    eng = make_engine()
     res = eng.run(trace)
     wall = time.perf_counter() - t0
+
+    if args.crash_at is not None:
+        demo_crash_recovery(make_engine, trace, args.crash_at, eng, res)
 
     s = res.telemetry.summary()
     print(f"\nreplayed in {wall:.2f}s wall "

@@ -1,5 +1,9 @@
 from .store import (  # noqa: F401
+    SCHEMA_VERSION,
+    CheckpointError,
     CheckpointManager,
+    latest_step,
+    load_arrays,
     load_checkpoint,
     save_checkpoint,
 )

@@ -28,6 +28,48 @@ import numpy as np
 
 _SEP = "/"
 
+# Version of the on-disk checkpoint layout (manifest + arrays.npz).  Bump on
+# incompatible changes; ``load_checkpoint``/``load_arrays`` refuse snapshots
+# written under a different major layout instead of mis-restoring them.
+#   1: {step, keys, shapes, dtypes, metadata, schema_version}
+SCHEMA_VERSION = 1
+
+
+class CheckpointError(RuntimeError):
+    """A snapshot on disk is unreadable: corrupted/truncated arrays, a
+    missing or unparsable manifest, or a schema-version mismatch.  Distinct
+    from FileNotFoundError (no snapshot at all) so recovery code can fall
+    back to an older step or to log replay instead of crashing."""
+
+
+def _read_manifest(path: Path) -> dict:
+    mpath = path / "manifest.json"
+    if not mpath.exists():
+        raise CheckpointError(f"checkpoint {path} has no manifest.json")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(f"corrupt manifest at {mpath}: {e}") from e
+    version = manifest.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise CheckpointError(
+            f"checkpoint {path} has schema_version {version!r}, "
+            f"this build reads {SCHEMA_VERSION}")
+    return manifest
+
+
+def _read_arrays(path: Path, manifest: dict) -> dict[str, np.ndarray]:
+    try:
+        with np.load(path / "arrays.npz") as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as e:     # zipfile/OSError/ValueError: all mean corrupt
+        raise CheckpointError(f"corrupt arrays.npz in {path}: {e}") from e
+    missing = [k for k in manifest["keys"] if k not in arrays]
+    if missing:
+        raise CheckpointError(
+            f"checkpoint {path} arrays missing manifest keys: {missing[:5]}")
+    return arrays
+
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -52,6 +94,7 @@ def save_checkpoint(root: str | os.PathLike, step: int, tree, metadata: dict | N
     arrays = {k: np.asarray(v) for k, v in items.items()}
     np.savez(tmp / "arrays.npz", **arrays)
     manifest = {
+        "schema_version": SCHEMA_VERSION,
         "step": step,
         "keys": sorted(arrays),
         "shapes": {k: list(a.shape) for k, a in arrays.items()},
@@ -80,18 +123,33 @@ def load_checkpoint(root: str | os.PathLike, step: int, like_tree, shardings=Non
     """Restore into the structure of ``like_tree``; optionally device_put each
     leaf with a (possibly different-mesh) target sharding tree."""
     path = Path(root) / f"step_{step:08d}"
-    data = np.load(path / "arrays.npz")
+    if not path.exists():
+        raise FileNotFoundError(f"no checkpoint at {path}")
+    manifest = _read_manifest(path)
+    data = _read_arrays(path, manifest)
     items, treedef = _flatten(like_tree)
     keys = list(items)
-    missing = [k for k in keys if k not in data.files]
+    missing = [k for k in keys if k not in data]
     if missing:
         raise KeyError(f"checkpoint missing keys: {missing[:5]} ...")
     leaves = [data[k] for k in keys]
     if shardings is not None:
         sh_items, _ = _flatten(shardings)
         leaves = [jax.device_put(l, sh_items[k]) for l, k in zip(leaves, keys)]
-    manifest = json.loads((path / "manifest.json").read_text())
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def load_arrays(root: str | os.PathLike, step: int):
+    """Raw restore: ``(arrays: dict[str, np.ndarray], metadata: dict)`` without
+    a ``like_tree``.  Used by snapshot consumers (the streaming engine's
+    restore path) whose tree structure is data-dependent — which tenants hold
+    GP blocks, how many trials have run — and therefore unknowable before the
+    snapshot itself is read."""
+    path = Path(root) / f"step_{step:08d}"
+    if not path.exists():
+        raise FileNotFoundError(f"no checkpoint at {path}")
+    manifest = _read_manifest(path)
+    return _read_arrays(path, manifest), manifest["metadata"]
 
 
 class CheckpointManager:

@@ -361,13 +361,19 @@ class ControlPlane:
         into pending completion events — compaction must not move them)."""
         return self.selected & ~self.observed & self.model_live
 
-    def compact(self, max_imbalance: float | None = None) -> dict[int, tuple]:
+    def compact(self, max_imbalance: float | None = None,
+                max_moves: int | None = None) -> dict[int, tuple]:
         """Rebalance live tenant blocks across shard spans until the load
         imbalance sits within ``max_imbalance`` (shardgp.compact).  Tenants
         with in-flight trials are pinned.  Returns ``{tenant_id: (old_ids,
         new_ids)}`` so callers holding global model ids (the streaming
         engine's launch queue / ownership maps) can remap.  With one shard
-        this is a no-op."""
+        this is a no-op.
+
+        ``max_moves`` bounds the relocations of one call — the incremental
+        mode (DESIGN.md §12): each call does at most that much work (a
+        bounded pause) and later calls continue toward the imbalance target,
+        amortizing a full stop-the-world pass across many events."""
         if not self._dynamic:
             raise RuntimeError("compaction is only supported on dynamic "
                                "ControlPlanes (not from_problem)")
@@ -378,7 +384,8 @@ class ControlPlane:
         movable = {
             int(t) for t in np.nonzero(self.tenant_live)[0]
             if not in_flight[self.membership[t]].any()}
-        moves = _compact.plan_moves(self._layout, movable, max_imbalance)
+        moves = _compact.plan_moves(self._layout, movable, max_imbalance,
+                                    max_moves)
         first_old: dict[int, np.ndarray] = {}
         for tid, old_start, new_start in moves:
             m = self._layout.blocks[tid].length
@@ -404,6 +411,120 @@ class ControlPlane:
             remap[tid] = (old_ids,
                           np.arange(pl.start, pl.stop, dtype=np.int64))
         return remap
+
+    # ---- snapshot / restore (the event-sourced engine, DESIGN.md §12) ------
+
+    def state_snapshot(self) -> tuple[dict, dict]:
+        """Full dynamic-mode state as ``(arrays, meta)`` for
+        ``checkpoint.store.save_checkpoint``.
+
+        The GP is captured *by construction recipe*, not by weights: per
+        live tenant we store its prior block and the block-local observation
+        sequence, because ``IncrementalGP``'s jitted append is bit-
+        deterministic — replaying the same observations on the same machine
+        rebuilds ``W``/``alpha`` exactly.  The float32 readout cache is
+        stored verbatim (plus the dirty set), so even entries of retired
+        blocks — stale, always masked, but part of byte-level state — are
+        restored exactly."""
+        if not self._dynamic:
+            raise RuntimeError("state_snapshot is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        arrays = {
+            "cp/selected": self.selected.copy(),
+            "cp/observed": self.observed.copy(),
+            "cp/cost": self.cost.copy(),
+            "cp/membership": self.membership.copy(),
+            "cp/best": self.best.copy(),
+            "cp/tenant_live": self.tenant_live.copy(),
+            "cp/model_live": self.model_live.copy(),
+            "cp/gp_mu": self.gp._mu.copy(),
+            "cp/gp_var": self.gp._var.copy(),
+        }
+        bid_to_tid = {bid: tid for tid, bid in self._block_ids.items()}
+        for tid, bid in self._block_ids.items():
+            eng = self.gp._engines[bid]
+            arrays[f"gp/{tid}/K"] = np.asarray(eng.K)
+            arrays[f"gp/{tid}/mu0"] = np.asarray(eng.mu0)
+            arrays[f"gp/{tid}/obs_idx"] = np.asarray(eng.observed, np.int64)
+            arrays[f"gp/{tid}/obs_z"] = np.asarray(
+                [eng._z[li] for li in eng.observed], np.float64)
+        lay = self._layout
+        meta = {
+            "num_models": self._num_models,
+            "num_tenants": self._num_tenants,
+            "free_tenant_slots": list(self._free_tenant_slots),
+            "rr_pointer": self.rr_pointer,
+            "no_obs_floor": self._no_obs_floor,
+            "floor_stats": {str(t): [mn, sd] for t, (mn, sd)
+                            in self._tenant_floor_stats.items()},
+            "rng_state": self.rng.bit_generator.state,
+            "layout": {
+                "num_shards": lay.num_shards,
+                "shard_capacity": lay.shard_capacity,
+                "alloc_capacity": lay.alloc.capacity,
+                "free": [[s, l] for s, l in lay.alloc._free],
+                "blocks": {str(k): [pl.start, pl.length]
+                           for k, pl in lay.blocks.items()},
+            },
+            "gp_dirty": sorted(bid_to_tid[b] for b in self.gp._dirty),
+            "gp_n": self.gp.n,
+        }
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        """Overwrite this (dynamic, same-config) plane with
+        :meth:`state_snapshot` output, in place — callers holding references
+        (the engine's bound chooser) keep working."""
+        from repro.shardgp import ShardLayout
+        if not self._dynamic:
+            raise RuntimeError("load_state is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        self.selected = np.array(arrays["cp/selected"], dtype=bool)
+        self.observed = np.array(arrays["cp/observed"], dtype=bool)
+        self.cost = np.array(arrays["cp/cost"], dtype=np.float64)
+        self.membership = np.array(arrays["cp/membership"], dtype=bool)
+        self.best = np.array(arrays["cp/best"], dtype=np.float64)
+        self.tenant_live = np.array(arrays["cp/tenant_live"], dtype=bool)
+        self.model_live = np.array(arrays["cp/model_live"], dtype=bool)
+        self._num_models = meta["num_models"]
+        self._num_tenants = meta["num_tenants"]
+        self._free_tenant_slots = list(meta["free_tenant_slots"])
+        self.rr_pointer = meta["rr_pointer"]
+        self._no_obs_floor = meta["no_obs_floor"]
+        self._tenant_floor_stats = {int(t): (mn, sd) for t, (mn, sd)
+                                    in meta["floor_stats"].items()}
+        self.rng.bit_generator.state = meta["rng_state"]
+
+        ml = meta["layout"]
+        lay = ShardLayout(num_shards=ml["num_shards"], shard_capacity=1)
+        lay.shard_capacity = ml["shard_capacity"]
+        lay.alloc.capacity = ml["alloc_capacity"]
+        lay.alloc._free = [(s, l) for s, l in ml["free"]]
+        from repro.shardgp.layout import BlockPlacement
+        lay.blocks = {int(k): BlockPlacement(start, length)
+                      for k, (start, length) in ml["blocks"].items()}
+        self._layout = lay
+
+        self.gp = BlockIncrementalGP.empty(self._jitter)
+        self._block_ids = {}
+        for k in ml["blocks"]:          # serialized insertion order
+            tid = int(k)
+            pl = lay.blocks[tid]
+            ids = np.arange(pl.start, pl.stop, dtype=np.int64)
+            bid = self.gp.add_block(ids, arrays[f"gp/{tid}/K"],
+                                    arrays[f"gp/{tid}/mu0"])
+            self._block_ids[tid] = bid
+            for li, z in zip(arrays[f"gp/{tid}/obs_idx"].tolist(),
+                             arrays[f"gp/{tid}/obs_z"].tolist()):
+                self.gp.observe(int(ids[li]), float(z))
+        self.gp.ensure_capacity(meta["gp_n"])
+        # exact cache bytes (incl. stale masked entries of retired blocks),
+        # and the dirty set as of the snapshot — the next flush recomputes
+        # exactly what the uninterrupted run would have
+        self.gp._mu = np.array(arrays["cp/gp_mu"], dtype=np.float32)
+        self.gp._var = np.array(arrays["cp/gp_var"], dtype=np.float32)
+        self.gp._dirty = {self._block_ids[t] for t in meta["gp_dirty"]}
+        self._rebuild_mirrors()
 
     # ---- event steps -------------------------------------------------------
 

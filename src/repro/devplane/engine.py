@@ -168,6 +168,42 @@ class DevPlaneEngine(StreamEngine):
             if slice_id not in self._free:
                 self._free.append(slice_id)
 
+    # ---- snapshot / restore (event sourcing, DESIGN.md §12) ----------------
+
+    def _encode_payload(self, kind: str, payload: tuple) -> list:
+        if kind == "dev_join":
+            ev = payload[0]
+            return [ev.at, ev.chips, ev.speed, ev.cls]
+        if kind in ("dev_leave", "dev_preempt"):
+            return list(payload)
+        return super()._encode_payload(kind, payload)
+
+    def _decode_payload(self, kind: str, data: list) -> tuple:
+        if kind == "dev_join":
+            at, chips, speed, cls = data
+            return (DeviceJoin(at=at, chips=chips, speed=speed, cls=cls),)
+        if kind in ("dev_leave", "dev_preempt"):
+            return tuple(data)
+        return super()._decode_payload(kind, data)
+
+    def _snapshot_extra(self) -> dict:
+        return {
+            "autoscale_last_action": (None if self.autoscale is None
+                                      else self.autoscale._last_action),
+            "autoscale_joins": self._autoscale_joins,
+            "autoscale_leaves": self._autoscale_leaves,
+            "scoring_passes": self._scoring_passes,
+        }
+
+    def _restore_extra(self, extra: dict) -> None:
+        if self.autoscale is not None:
+            last = extra["autoscale_last_action"]
+            self.autoscale._last_action = (float("-inf") if last is None
+                                           else last)
+        self._autoscale_joins = extra["autoscale_joins"]
+        self._autoscale_leaves = extra["autoscale_leaves"]
+        self._scoring_passes = extra["scoring_passes"]
+
     # ---- autoscale ---------------------------------------------------------
 
     def _post_event(self, kind: str) -> None:

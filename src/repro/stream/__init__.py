@@ -19,9 +19,24 @@ identical decision sequence (tests/test_shardgp.py).  See DESIGN.md §9–§10.
 The *device* side goes elastic in ``repro.devplane``: device classes,
 DeviceJoin/Leave/Preempt churn, autoscale, and joint batched (device,
 model) assignment — DESIGN.md §11.
+
+The control plane is event-sourced (``eventlog.py``, DESIGN.md §12): every
+run appends its external and processed events to an append-only
+:class:`EventLog`, periodic full-state snapshots go through
+``repro.checkpoint.store``, and ``recover(factory, snapshot_root, log)`` +
+``engine.resume()`` reproduces the uninterrupted run byte-identically from
+any crash point — the universal correctness property the crash-anywhere
+suite (tests/test_eventlog.py) fuzzes.
 """
 
 from .engine import StreamEngine, StreamResult, StreamTrial  # noqa: F401
+from .eventlog import (  # noqa: F401
+    EventLog,
+    FaultInjector,
+    SimulatedCrash,
+    first_divergence,
+    recover,
+)
 from .telemetry import TelemetrySink  # noqa: F401
 from .workload import (  # noqa: F401
     ChurnTrace,

@@ -51,9 +51,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.control_plane import ControlPlane, tenant_warm_models
-from repro.core.fleet import Fleet
+from repro.core.fleet import DeviceSlice, Fleet
 from repro.core.scheduler import POLICIES
 
+from .eventlog import EventLog, FaultInjector
 from .telemetry import TelemetrySink
 from .workload import ChurnTrace, SliceFail, TenantArrive, TenantDepart
 
@@ -123,8 +124,13 @@ class StreamEngine:
         score_kernel: str = "xla",
         compact_every: int | None = None,
         compact_imbalance: float | None = None,
+        compact_max_moves: int | None = None,
         launch_order: str = "lifo",
         telemetry: TelemetrySink | None = None,
+        log: EventLog | None = None,
+        snapshot_root: str | None = None,
+        snapshot_every: int | None = None,
+        fault: FaultInjector | None = None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
@@ -138,7 +144,17 @@ class StreamEngine:
         self.max_live_models = max_live_models
         self.compact_every = compact_every
         self.compact_imbalance = compact_imbalance
+        self.compact_max_moves = compact_max_moves
         self.telemetry = telemetry or TelemetrySink()
+        # event sourcing (DESIGN.md §12): every run appends its external
+        # events and one processed record per handled event to the log; with
+        # snapshot_root set, full-state snapshots land every snapshot_every
+        # processed events through checkpoint/store.py
+        self.log = log if log is not None else EventLog()
+        self.snapshot_root = snapshot_root
+        self.snapshot_every = snapshot_every
+        self.fault = fault
+        self.event_index = 0
         self.cp = ControlPlane(np.random.default_rng(seed), scorer=scorer,
                                num_shards=num_shards,
                                score_kernel=score_kernel)
@@ -164,8 +180,14 @@ class StreamEngine:
         self._decision_seconds = 0.0
         self._policy_launches = 0
         self._compaction_moves = 0
+        self.compaction_move_counts: list[int] = []  # blocks moved per call
+        self._trace_name = "trace"
 
     # ---- event plumbing ----------------------------------------------------
+
+    def _fault(self, point: str) -> None:
+        if self.fault is not None:
+            self.fault.check(point, self.event_index)
 
     def _push(self, t: float, kind: str, payload: tuple) -> None:
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
@@ -233,13 +255,20 @@ class StreamEngine:
             if self._owner_of_model.get(g) is tr:
                 del self._owner_of_model[g]
         self._drain_admission_queue()
-        if self.compact_every and self._departures % self.compact_every == 0:
+        # incremental mode (compact_max_moves set) defaults to a bounded
+        # pass on EVERY departure — small pauses, amortized convergence —
+        # while compact_every alone keeps the periodic stop-the-world pass
+        every = self.compact_every or (1 if self.compact_max_moves else None)
+        if every and self._departures % every == 0:
             self._run_compaction()
 
     def _run_compaction(self) -> None:
         """Rebalance idle tenant blocks across shard spans and remap every
         engine-side structure that holds global model ids."""
-        remap = self.cp.compact(self.compact_imbalance)
+        remap = self.cp.compact(self.compact_imbalance,
+                                max_moves=self.compact_max_moves)
+        self.compaction_move_counts.append(len(remap))
+        self._fault("mid_compact")
         if not remap:
             return
         by_tid = {tr.tenant_id: tr for tr in self._tenants.values()
@@ -350,6 +379,7 @@ class StreamEngine:
         dur = self._duration_on(model, s)
         end = self._t + dur
         self.cp.record_start(model)
+        self._fault("mid_launch")
         ti = len(self._trials)
         s.current_trial = ti
         s.busy_until = end
@@ -426,20 +456,39 @@ class StreamEngine:
         """Hook between event handling and the launch pass — the devplane
         engine evaluates its autoscale policy here.  Base: no-op."""
 
-    def run(self, trace: ChurnTrace, horizon: float = np.inf) -> StreamResult:
-        """Replay one trace to completion (or ``horizon``) and return the
-        trial log + telemetry.  A fresh engine per run."""
-        for ev in trace:
+    def begin(self, events, trace_name: str = "trace") -> None:
+        """Ingest all external events (appending each to the log) and
+        register the initial fleet — everything ``run`` does before the
+        first heap pop.  ``recover`` uses this for genesis replay."""
+        self._trace_name = trace_name
+        self.log.set_meta(trace_name=trace_name)
+        for ev in events:
+            self.log.append_external(ev)
             self._ingest(ev)
         for s in self.fleet.slices:
             self.telemetry.on_device_join(0.0, s.slice_id, s.speed,
                                           initial=True)
 
+    def run(self, trace: ChurnTrace, horizon: float = np.inf) -> StreamResult:
+        """Replay one trace to completion (or ``horizon``) and return the
+        trial log + telemetry.  A fresh engine per run."""
+        self.begin(trace, trace_name=trace.name)
+        return self._drain(horizon)
+
+    def resume(self, horizon: float = np.inf) -> StreamResult:
+        """Continue a begun or restored engine to completion — the second
+        half of ``run``.  ``recover(...)`` + ``resume()`` must reproduce the
+        uninterrupted ``run`` exactly (the replay oracle)."""
+        return self._drain(horizon)
+
+    def _drain(self, horizon: float) -> StreamResult:
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
             if t >= horizon:
                 break
             self._t = t
+            self.event_index += 1
+            self._fault("before")
             if kind == "arrive":
                 self._handle_arrive(*payload)
             elif kind == "depart":
@@ -452,21 +501,183 @@ class StreamEngine:
                 self._handle_recover(*payload)
             else:
                 self._dispatch_extra(kind, payload)
+            self.log.append_processed(self.event_index, t, kind,
+                                      self._encode_payload(kind, payload))
             self._post_event(kind)
             # simultaneous arrivals are admitted as one batch before any
             # launch — this is what makes the churn-free replay line up with
             # simulate()'s pre-built warm-start queue
-            if (kind == "arrive" and self._heap
-                    and self._heap[0][0] == t and self._heap[0][2] == "arrive"):
-                continue
-            self._try_launch(horizon)
+            if not (kind == "arrive" and self._heap
+                    and self._heap[0][0] == t
+                    and self._heap[0][2] == "arrive"):
+                self._try_launch(horizon)
+            self._fault("after")
+            self._maybe_snapshot()
 
         self.telemetry.on_end(self._t, self.fleet.num_devices)
         return StreamResult(
-            trace_name=trace.name, policy=self.policy,
+            trace_name=self._trace_name, policy=self.policy,
             num_devices=self.fleet.num_devices, trials=self._trials,
             end_time=self._t, decisions=self._decisions,
             decision_seconds=self._decision_seconds,
             telemetry=self.telemetry, tenants=self._tenants,
             compaction_moves=self._compaction_moves,
             policy_launches=self._policy_launches)
+
+    # ---- snapshot / restore (event sourcing, DESIGN.md §12) ----------------
+
+    def _maybe_snapshot(self) -> None:
+        if (self.snapshot_root is not None and self.snapshot_every
+                and self.event_index % self.snapshot_every == 0):
+            self.save_snapshot()
+
+    def save_snapshot(self):
+        """Write a full-state snapshot at the current event boundary via
+        ``checkpoint.store.save_checkpoint`` (atomic publish)."""
+        from repro.checkpoint.store import save_checkpoint
+        arrays, meta = self._snapshot_state()
+        return save_checkpoint(self.snapshot_root, self.event_index,
+                               arrays, meta)
+
+    def _encode_payload(self, kind: str, payload: tuple) -> list:
+        """JSON-able encoding of one heap payload (snapshot + processed-log
+        record).  Tenant runtimes are referenced by stable tenant_key; the
+        devplane engine extends this for device lifecycle kinds."""
+        if kind == "arrive":
+            return [payload[0].key]
+        if kind in ("depart", "finish", "slice_fail", "recover"):
+            return list(payload)
+        raise AssertionError(f"unknown event kind {kind!r}")
+
+    def _decode_payload(self, kind: str, data: list) -> tuple:
+        """Inverse of :meth:`_encode_payload`; runs after ``_tenants`` is
+        rebuilt so arrive entries resolve to the live runtime objects."""
+        if kind == "arrive":
+            return (self._tenants[data[0]],)
+        if kind in ("depart", "finish", "slice_fail", "recover"):
+            return tuple(data)
+        raise AssertionError(f"unknown event kind {kind!r}")
+
+    def _snapshot_extra(self) -> dict:
+        """Subclass state to include in snapshots (devplane overrides)."""
+        return {}
+
+    def _restore_extra(self, extra: dict) -> None:
+        """Inverse of :meth:`_snapshot_extra`."""
+
+    def _snapshot_state(self) -> tuple[dict, dict]:
+        arrays, cp_meta = self.cp.state_snapshot()
+        tr = self._trials
+        arrays.update({
+            "trials/model": np.asarray([t.model for t in tr], np.int64),
+            "trials/tenant_key": np.asarray([t.tenant_key for t in tr],
+                                            np.int64),
+            "trials/local_model": np.asarray([t.local_model for t in tr],
+                                             np.int64),
+            "trials/user_hint": np.asarray([t.user_hint for t in tr],
+                                           np.int64),
+            "trials/device": np.asarray([t.device for t in tr], np.int64),
+            "trials/start": np.asarray([t.start for t in tr], np.float64),
+            "trials/end": np.asarray([t.end for t in tr], np.float64),
+            "trials/z": np.asarray([t.z if t.z is not None else 0.0
+                                    for t in tr], np.float64),
+            "trials/has_z": np.asarray([t.z is not None for t in tr], bool),
+        })
+        meta = {
+            "engine": {
+                "t": self._t, "seq": self._seq,
+                "event_index": self.event_index,
+                "trace_name": self._trace_name,
+                "decisions": self._decisions,
+                "decision_seconds": self._decision_seconds,
+                "policy_launches": self._policy_launches,
+                "compaction_moves": self._compaction_moves,
+                "compaction_move_counts": list(self.compaction_move_counts),
+                "departures": self._departures,
+                "live_models": self._live_models,
+                "free": list(self._free),
+                "pending": [[k, g] for k, g in self._pending],
+                "admission_queue": [q.key for q in self._admission_queue],
+                "cancelled": sorted(self._cancelled),
+                "heap": [[t, seq, kind, self._encode_payload(kind, payload)]
+                         for t, seq, kind, payload in self._heap],
+            },
+            "tenants": {str(tr_.key): [tr_.admitted_at, tr_.departed,
+                                       tr_.tenant_id, tr_.model_start]
+                        for tr_ in self._tenants.values()},
+            "fleet": [[s.slice_id, s.chips, s.speed, s.healthy, s.busy_until,
+                       s.current_trial, s.cls, s.retired]
+                      for s in self.fleet.slices],
+            "telemetry": self.telemetry.state_dict(),
+            "cp": cp_meta,
+            "extra": self._snapshot_extra(),
+        }
+        return arrays, meta
+
+    def _restore_state(self, arrays: dict, meta: dict,
+                       arrive_by_key: dict) -> None:
+        """Load a :meth:`_snapshot_state` snapshot into this freshly
+        constructed, identically configured engine.  ``arrive_by_key`` maps
+        tenant_key -> TenantArrive from the event log — snapshots reference
+        tenants by key instead of re-storing their (large) prior blocks."""
+        me = meta["engine"]
+        self._t = me["t"]
+        self._seq = me["seq"]
+        self.event_index = me["event_index"]
+        self._trace_name = me["trace_name"]
+        self._decisions = me["decisions"]
+        self._decision_seconds = me["decision_seconds"]
+        self._policy_launches = me["policy_launches"]
+        self._compaction_moves = me["compaction_moves"]
+        self.compaction_move_counts = list(me["compaction_move_counts"])
+        self._departures = me["departures"]
+        self._live_models = me["live_models"]
+        self._free = list(me["free"])
+        self._pending = [(k, g) for k, g in me["pending"]]
+        self._cancelled = set(me["cancelled"])
+
+        self._tenants = {}
+        for key_s, (admitted_at, departed, tid, mstart) in \
+                meta["tenants"].items():
+            key = int(key_s)
+            self._tenants[key] = _TenantRuntime(
+                key=key, arrive=arrive_by_key[key], admitted_at=admitted_at,
+                departed=departed, tenant_id=tid, model_start=mstart)
+        self._admission_queue = [self._tenants[k]
+                                 for k in me["admission_queue"]]
+        self._owner_of_model = {}
+        for tr in self._tenants.values():
+            if tr.tenant_id is not None and not tr.departed:
+                for g in range(tr.model_start,
+                               tr.model_start + tr.arrive.num_models):
+                    self._owner_of_model[g] = tr
+        # the stored list is a valid heap; re-decoding in place preserves
+        # the exact arrangement (and (t, seq) is a total order, so payloads
+        # are never compared)
+        self._heap = [(t, seq, kind, self._decode_payload(kind, data))
+                      for t, seq, kind, data in me["heap"]]
+
+        z = arrays["trials/z"]
+        has_z = arrays["trials/has_z"]
+        self._trials = [
+            StreamTrial(
+                model=int(arrays["trials/model"][i]),
+                tenant_key=int(arrays["trials/tenant_key"][i]),
+                local_model=int(arrays["trials/local_model"][i]),
+                user_hint=int(arrays["trials/user_hint"][i]),
+                device=int(arrays["trials/device"][i]),
+                start=float(arrays["trials/start"][i]),
+                end=float(arrays["trials/end"][i]),
+                z=float(z[i]) if has_z[i] else None)
+            for i in range(len(z))]
+
+        self.fleet.slices[:] = [
+            DeviceSlice(slice_id=sid, chips=chips, speed=speed,
+                        healthy=healthy, busy_until=busy_until,
+                        current_trial=current_trial, cls=cls, retired=retired)
+            for sid, chips, speed, healthy, busy_until, current_trial, cls,
+            retired in meta["fleet"]]
+
+        self.telemetry.load_state(meta["telemetry"])
+        self.cp.load_state(arrays, meta["cp"])
+        self._restore_extra(meta["extra"])

@@ -154,6 +154,57 @@ class TelemetrySink:
         self.end_time = t
         self.num_slices = num_slices
 
+    # ---- snapshot / restore (the event-sourced engine, DESIGN.md §12) ------
+
+    def state_dict(self) -> dict:
+        """Full sink state as a JSON-able dict.  Floats survive the JSON
+        round trip exactly (repr-based), including the ±inf sentinels, so a
+        restored sink's aggregates are byte-identical — the crash-anywhere
+        oracle compares ``summary()`` / ``per_tenant()`` outputs directly."""
+        return {
+            "tenants": {str(k): [st.arrived, st.admitted, st.departed,
+                                 st.first_obs, st.last_served, st.num_obs,
+                                 st.best_z, st.best_possible,
+                                 list(st.serve_gaps)]
+                        for k, st in self.tenants.items()},
+            "devices": {str(k): [ds.joined, ds.speed, ds.left,
+                                 ds.busy_seconds, ds.trials, ds.initial]
+                        for k, ds in self.devices.items()},
+            "queue_depth_samples": [[t, d]
+                                    for t, d in self.queue_depth_samples],
+            "busy_seconds": self.busy_seconds,
+            "num_trials": self.num_trials,
+            "num_failed_trials": self.num_failed_trials,
+            "num_rejected_observations": self.num_rejected_observations,
+            "num_preemptions": self.num_preemptions,
+            "end_time": self.end_time,
+            "num_slices": self.num_slices,
+        }
+
+    def load_state(self, d: dict) -> None:
+        """Overwrite this sink with :meth:`state_dict` output.  Dict
+        insertion order is preserved through JSON, which keeps the order-
+        sensitive float reductions in ``summary()`` byte-stable."""
+        self.tenants = {
+            int(k): _TenantStats(arrived=v[0], admitted=v[1], departed=v[2],
+                                 first_obs=v[3], last_served=v[4],
+                                 num_obs=v[5], best_z=v[6],
+                                 best_possible=v[7], serve_gaps=list(v[8]))
+            for k, v in d["tenants"].items()}
+        self.devices = {
+            int(k): _DeviceStats(joined=v[0], speed=v[1], left=v[2],
+                                 busy_seconds=v[3], trials=v[4], initial=v[5])
+            for k, v in d["devices"].items()}
+        self.queue_depth_samples = [(t, depth)
+                                    for t, depth in d["queue_depth_samples"]]
+        self.busy_seconds = d["busy_seconds"]
+        self.num_trials = d["num_trials"]
+        self.num_failed_trials = d["num_failed_trials"]
+        self.num_rejected_observations = d["num_rejected_observations"]
+        self.num_preemptions = d["num_preemptions"]
+        self.end_time = d["end_time"]
+        self.num_slices = d["num_slices"]
+
     # ---- aggregation -------------------------------------------------------
 
     def summary(self) -> dict:

@@ -39,3 +39,11 @@ def run_forced_devices_subprocess(code: str, devices: int = 8) -> dict:
         capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture
+def forced_devices():
+    """The forced-device subprocess recipe as a fixture — test modules that
+    only need to *run* code on a faked multi-device host take this instead
+    of importing the helper, keeping the env recipe in one place."""
+    return run_forced_devices_subprocess

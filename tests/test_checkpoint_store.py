@@ -1,0 +1,138 @@
+"""Direct coverage for checkpoint/store.py (previously only exercised
+indirectly through training-loop and engine-snapshot tests): round trips,
+the atomic-publish layout, and — the recovery-critical part — that every
+flavor of on-disk damage surfaces as :class:`CheckpointError`, the signal
+``stream.eventlog.recover`` uses to fall back to an older step or genesis
+instead of mis-restoring."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    SCHEMA_VERSION,
+    CheckpointError,
+    CheckpointManager,
+    latest_step,
+    load_arrays,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(rng):
+    return {"w": rng.standard_normal((4, 3)),
+            "opt": {"m": rng.standard_normal(5), "count": np.int64(7)},
+            "mask": np.array([True, False, True])}
+
+
+def _save(tmp_path, rng, step=3, meta=None):
+    return save_checkpoint(tmp_path, step, _tree(rng),
+                           meta if meta is not None else {"note": "hi"})
+
+
+def test_round_trip_like_tree(tmp_path, rng):
+    tree = _tree(rng)
+    path = save_checkpoint(tmp_path, 3, tree, {"note": "hi"})
+    assert path == tmp_path / "step_00000003"
+    like = {"w": np.zeros((4, 3)),
+            "opt": {"m": np.zeros(5), "count": np.int64(0)},
+            "mask": np.zeros(3, bool)}
+    back, meta = load_checkpoint(tmp_path, 3, like)
+    assert meta == {"note": "hi"}
+    np.testing.assert_array_equal(back["w"], tree["w"])
+    np.testing.assert_array_equal(back["opt"]["m"], tree["opt"]["m"])
+    assert int(back["opt"]["count"]) == 7
+    np.testing.assert_array_equal(back["mask"], tree["mask"])
+
+
+def test_round_trip_raw_arrays(tmp_path, rng):
+    """load_arrays: the engine-snapshot path — no like_tree, exact bytes."""
+    tree = _tree(rng)
+    save_checkpoint(tmp_path, 5, tree, {"event_index": 41})
+    arrays, meta = load_arrays(tmp_path, 5)
+    assert meta == {"event_index": 41}
+    assert set(arrays) == {"w", "opt/m", "opt/count", "mask"}
+    np.testing.assert_array_equal(arrays["w"], tree["w"])
+    assert arrays["w"].dtype == tree["w"].dtype
+
+
+def test_missing_step_is_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_arrays(tmp_path, 1)
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(tmp_path, 1, {"w": np.zeros(2)})
+
+
+def test_corrupt_arrays_rejected(tmp_path, rng):
+    path = _save(tmp_path, rng)
+    (path / "arrays.npz").write_bytes(b"this is not a zipfile")
+    with pytest.raises(CheckpointError, match="corrupt arrays"):
+        load_arrays(tmp_path, 3)
+
+
+def test_truncated_arrays_rejected(tmp_path, rng):
+    path = _save(tmp_path, rng)
+    blob = (path / "arrays.npz").read_bytes()
+    (path / "arrays.npz").write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointError):
+        load_arrays(tmp_path, 3)
+
+
+def test_missing_manifest_rejected(tmp_path, rng):
+    path = _save(tmp_path, rng)
+    (path / "manifest.json").unlink()
+    with pytest.raises(CheckpointError, match="no manifest"):
+        load_arrays(tmp_path, 3)
+
+
+def test_unparsable_manifest_rejected(tmp_path, rng):
+    path = _save(tmp_path, rng)
+    (path / "manifest.json").write_text("{truncated")
+    with pytest.raises(CheckpointError, match="corrupt manifest"):
+        load_arrays(tmp_path, 3)
+
+
+def test_schema_version_mismatch_rejected(tmp_path, rng):
+    path = _save(tmp_path, rng)
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["schema_version"] == SCHEMA_VERSION
+    manifest["schema_version"] = SCHEMA_VERSION + 1
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointError, match="schema_version"):
+        load_arrays(tmp_path, 3)
+
+
+def test_arrays_missing_manifest_key_rejected(tmp_path, rng):
+    """A manifest promising keys the npz lacks means a torn write slipped
+    through — must be CheckpointError, not a KeyError deep in restore."""
+    path = _save(tmp_path, rng)
+    with np.load(path / "arrays.npz") as data:
+        arrays = {k: data[k] for k in data.files}
+    arrays.pop("w")
+    np.savez(path / "arrays.npz", **arrays)
+    with pytest.raises(CheckpointError, match="missing manifest keys"):
+        load_arrays(tmp_path, 3)
+
+
+def test_latest_step_ignores_tmp_dirs(tmp_path, rng):
+    assert latest_step(tmp_path) is None
+    _save(tmp_path, rng, step=3)
+    _save(tmp_path, rng, step=7)
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert latest_step(tmp_path) == 7
+
+
+def test_manager_retention_and_restore_latest(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    like = _tree(np.random.default_rng(99))
+    for step in (1, 2, 3):
+        mgr.save(step, _tree(np.random.default_rng(step)),
+                 {"step": step}, blocking=True)
+    assert latest_step(tmp_path) == 3
+    assert not (tmp_path / "step_00000001").exists()   # gc'd past keep=2
+    step, tree, meta = mgr.restore_latest(like)
+    assert step == 3 and meta == {"step": 3}
+    np.testing.assert_array_equal(
+        tree["w"], _tree(np.random.default_rng(3))["w"])

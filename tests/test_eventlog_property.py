@@ -1,0 +1,99 @@
+"""Property tests for the event-sourced control plane (hypothesis).
+
+Skipped cleanly when hypothesis is not installed (same convention as
+tests/test_churn_property.py — the deterministic twins of every property
+here live in tests/test_eventlog.py and always run).
+
+Two properties:
+
+* the replay oracle under *fuzzed* churn interleavings: an arbitrary
+  seeded mixture of tenant arrivals/departures and device
+  joins/leaves/preemptions, killed at an arbitrary processed-event index,
+  recovers byte-identically (trials + telemetry + regret);
+* departure-boundary compaction accounting: with ``compact_every=k`` the
+  engine runs exactly ``admitted_departures // k`` passes regardless of
+  interleaving; with ``compact_max_moves`` and no period it runs one
+  bounded pass per departure.
+"""
+
+import tempfile
+from pathlib import Path
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.devplane import DevPlaneEngine  # noqa: E402
+from repro.core.fleet import Fleet  # noqa: E402
+from repro.stream import device_churn_trace  # noqa: E402
+
+from test_eventlog import (  # noqa: E402
+    assert_replay_matches,
+    crash_and_recover,
+    fingerprint,
+    run_reference,
+)
+
+
+def _make_factory(compact_every, compact_max_moves):
+    def make(**kw):
+        return DevPlaneEngine(Fleet.partition_pod(16 * 4, 4), "mdmt",
+                              seed=0, max_live_models=30, num_shards=2,
+                              assign="batched", compact_every=compact_every,
+                              compact_max_moves=compact_max_moves, **kw)
+    return make
+
+
+churn_traces = st.builds(
+    device_churn_trace,
+    num_sessions=st.integers(4, 10),
+    arrival_rate=st.floats(0.5, 2.0),
+    seed=st.integers(0, 10_000),
+    initial_slices=st.integers(2, 4),
+    join_rate=st.floats(0.0, 0.15),
+    leave_rate=st.floats(0.0, 0.10),
+    preempt_rate=st.floats(0.0, 0.10),
+    m_min=st.just(2), m_max=st.just(6),
+    session_scale=st.floats(5.0, 15.0),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=churn_traces,
+       compact_every=st.sampled_from([None, 1, 2]),
+       crash_frac=st.floats(0.0, 1.0),
+       point=st.sampled_from(["before", "after"]))
+def test_replay_oracle_under_fuzzed_churn(trace, compact_every, crash_frac,
+                                          point):
+    make = _make_factory(compact_every, None)
+    ref_eng, ref_res = run_reference(make, trace)
+    n = ref_eng.event_index
+    idx = min(n, max(1, round(crash_frac * n)))
+    with tempfile.TemporaryDirectory() as d:
+        out = crash_and_recover(make, trace, idx, point, Path(d),
+                                snapshot_every=8)
+        assert_replay_matches(ref_eng, ref_res, *out[:3],
+                              context=f"fuzz_{trace.name}_{point}_{idx}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(trace=churn_traces,
+       compact_every=st.sampled_from([None, 1, 2, 3]),
+       max_moves=st.sampled_from([None, 1, 2]))
+def test_compaction_boundary_count_property(trace, compact_every, max_moves):
+    make = _make_factory(compact_every, max_moves)
+    eng, res = run_reference(make, trace)
+    counts = eng.compaction_move_counts
+    if compact_every:
+        assert len(counts) == eng._departures // compact_every
+    elif max_moves:
+        assert len(counts) == eng._departures   # one bounded pass per depart
+    else:
+        assert counts == []
+    if max_moves:
+        assert all(c <= max_moves for c in counts)
+    # determinism sanity: the same trace + config reruns identically
+    eng2, res2 = run_reference(make, trace)
+    assert fingerprint(eng2, res2) == fingerprint(eng, res)

@@ -1,0 +1,34 @@
+"""Direct unit tests for the shared forced-device subprocess recipe
+(tests/conftest.py ``run_forced_devices_subprocess`` / the
+``forced_devices`` fixture) — previously only exercised implicitly by the
+sharding suites, so a recipe regression surfaced as a confusing cascade of
+multi-device failures instead of one pointed test."""
+
+import pytest
+
+
+@pytest.mark.slow
+def test_honors_device_count_and_parses_last_json_line(forced_devices):
+    """The env recipe must actually fake the requested CPU device count,
+    and the harness must return the LAST stdout line as JSON — earlier
+    prints (progress noise, jax warnings redirected to stdout) must not
+    break parsing."""
+    res = forced_devices("""
+        import json
+        import jax
+        print("preamble noise that is not JSON")
+        print(json.dumps({"devices": len(jax.devices()),
+                          "platform": jax.devices()[0].platform}))
+    """, devices=3)
+    assert res == {"devices": 3, "platform": "cpu"}
+
+
+def test_failing_subprocess_surfaces_stderr(forced_devices):
+    """A non-zero exit must fail the calling test with the subprocess's
+    stderr in the assertion message (the only debugging handle there is)."""
+    with pytest.raises(AssertionError, match="boom-marker"):
+        forced_devices("""
+            import sys
+            sys.stderr.write("boom-marker\\n")
+            sys.exit(7)
+        """, devices=2)

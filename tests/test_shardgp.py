@@ -276,16 +276,12 @@ def test_churn_service_memory_bounded_no_posterior_drift():
 
 # --- acceptance: multi-device decision equivalence (criterion 1) --------------
 
-def _run_subprocess(code: str, devices: int = 4) -> dict:
-    return run_forced_devices_subprocess(code, devices)
-
-
 def test_sharded_equals_fused_streaming_episode_4dev():
     """The acceptance gate: on a forced 4-device host mesh, a full streaming
     episode under churn picks the identical (tenant, model) sequence with
     scorer="sharded" as with scorer="fused" (same index space: both planes
     run num_shards=4)."""
-    res = _run_subprocess("""
+    res = run_forced_devices_subprocess("""
         import json
         import numpy as np
         from repro.core.fleet import Fleet
@@ -309,7 +305,7 @@ def test_sharded_equals_fused_streaming_episode_4dev():
             "num_trials": len(seqs["fused"]),
             "equal": seqs["fused"] == seqs["sharded"],
         }))
-    """)
+    """, devices=4)
     assert res["devices"] == 4
     assert res["num_trials"] > 50
     assert res["equal"], "sharded scorer diverged from fused on 4 shards"
@@ -325,7 +321,7 @@ def test_sharded_decide_matches_argmax_4dev_random_states():
     the sliced and full-shape computation (a tenant-axis sum with <= 2
     nonzero terms has exactly one rounding regardless of association; see
     DESIGN.md §10's exactness argument)."""
-    res = _run_subprocess("""
+    res = run_forced_devices_subprocess("""
         import json
         import numpy as np
         import jax.numpy as jnp
@@ -363,5 +359,5 @@ def test_sharded_decide_matches_argmax_4dev_random_states():
                 trial, score, float(ref_score))
             checks += 1
         print(json.dumps({"checks": checks}))
-    """)
+    """, devices=4)
     assert res["checks"] == 20

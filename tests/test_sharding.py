@@ -31,14 +31,11 @@ def test_mesh_axes_deduplicates_repeated_axes():
     assert spec[0] == "model" and spec[1] is None
 
 
-_run_subprocess = run_forced_devices_subprocess
-
-
 @pytest.mark.slow
 def test_train_step_runs_on_2x4_mesh():
     """Real sharded execution: smoke config, 2x4 mesh, loss finite, params
     actually sharded over the model axis."""
-    res = _run_subprocess("""
+    res = run_forced_devices_subprocess("""
         import json
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_smoke_config
@@ -89,7 +86,7 @@ def test_train_step_runs_on_2x4_mesh():
 def test_dryrun_cell_on_small_mesh_has_collectives():
     """Lower+compile a smoke train cell on a 2x4 mesh and check the SPMD
     module contains gradient collectives (all-reduce/reduce-scatter)."""
-    res = _run_subprocess("""
+    res = run_forced_devices_subprocess("""
         import json
         import jax
         from repro.configs import get_smoke_config
