@@ -141,15 +141,49 @@ def emit(name: str, us_per_call: float, **derived) -> None:
                              **{k: str(v) for k, v in derived.items()}}
 
 
-def time_us(fn, *args, iters: int = 20, warmup: int = 3, **kw) -> float:
-    for _ in range(warmup):
-        fn(*args, **kw)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
+def block_ready(x):
+    """``jax.block_until_ready`` with a graceful identity fallback — the one
+    device-timing primitive (re-exported from ``repro.obs.trace`` so the
+    tracer's span sync and the benchmarks measure the same way)."""
     try:
-        import jax
-        jax.block_until_ready(out)
-    except Exception:
-        pass
+        from repro.obs.trace import block_ready as _br
+    except ImportError:       # benchmarks runnable without src on the path
+        try:
+            import jax
+            return jax.block_until_ready(x)
+        except Exception:
+            return x
+    return _br(x)
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3, sync: bool = False,
+            **kw) -> float:
+    """Mean wall time of ``fn(*args, **kw)`` in µs, after ``warmup`` calls.
+
+    Default blocks once after the loop — right for measuring steady-state
+    dispatch throughput of an async pipeline.  ``sync=True`` blocks on every
+    iteration (and on every warmup call), which is what a *latency* number
+    needs: per-call time including execution, the recipe the old per-file
+    ``decide_sync`` wrappers duplicated."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        if sync:
+            block_ready(out)
+    t0 = time.perf_counter()
+    if sync:
+        for _ in range(iters):
+            block_ready(fn(*args, **kw))
+    else:
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        block_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def timed(fn, *args, **kw):
+    """One synced call: ``(seconds, result)``.  For one-shot costs (a
+    compaction pass, a snapshot write) where an iteration loop would
+    mutate state it shouldn't."""
+    t0 = time.perf_counter()
+    out = block_ready(fn(*args, **kw))
+    return time.perf_counter() - t0, out

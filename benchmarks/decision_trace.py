@@ -1,0 +1,181 @@
+"""Span-level cost attribution of one sharded GP-EI decision
+(-> BENCH_decision_trace.json, the data the next scaling PR builds on).
+
+The ROADMAP's top open item asks where a |L|=100k decision's ~220ms goes.
+Two measurements per (|L|, mesh) point:
+
+* ``decision_trace_L{n}_S{s}`` — the fused readout->score->argmax pipeline
+  run phase-decomposed (``ShardedScorer.readout_decide_topk_phased``): the
+  same program cut at its two natural barriers, each phase closed under an
+  obs-tracer span with a ``block_until_ready`` sync.  The row carries the
+  per-phase means (``readout`` — GP posterior re-materialization from the
+  (k_obs, n) W buffer; ``score_topk`` — EIrate + per-shard top-k;
+  ``gather_pick`` — cross-shard all_gather + replicated argmax), the share
+  of the root ``decide`` span they attribute (**acceptance: >= 90% at
+  |L|=100k**, asserted below), and the fused single-program time for
+  reference (the phase split pays extra dispatches, so phases sum above
+  fused — attribution is about *where*, fused is about *how fast*).
+
+* ``decision_overhead_L{n}_S{s}`` — the cost of the instrumentation when
+  tracing is OFF.  The engine's full per-decision span-site stack (event ->
+  decide -> posterior/score -> pad_upload/shard_decide, all on a disabled
+  tracer — each site one branch + one shared no-op context manager) is
+  timed *directly* over thousands of iterations (``site_us``) and the row's
+  ``overhead_pct`` is that stack cost as a share of the bare fused
+  decision.  **Acceptance: < 1% at |L|=100k**, asserted below.  The paired
+  bare-vs-wrapped decision timings ride along as reference fields
+  (``bare_us``/``wrapped_us``) but do not gate: the difference of two
+  ~100ms CPU means has multi-percent run-to-run noise and cannot resolve a
+  ~1µs stack.
+
+Mesh sizes sweep {1, 8} clipped to the visible device count; the committed
+numbers are produced with ``XLA_FLAGS=--xla_force_host_platform_device_count=8
+JAX_PLATFORMS=cpu`` (same protocol as BENCH_shard_scale.json — host
+"devices" share cores, so S=8 validates attribution of the sharded program,
+not speedup).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+from .common import FAST, emit, time_us
+from .shard_scale import K_OBS, TOPK, _synthetic_state
+
+
+def _mesh_sizes() -> list[int]:
+    import jax
+    avail = len(jax.devices())
+    return [s for s in (1, 8) if s <= avail]
+
+
+def _sizes() -> list[int]:
+    return [2048] if FAST else [10_000, 100_000]
+
+
+def _setup(n: int, shards: int):
+    """Device-resident scoring state at |L|=n on a ``shards``-way mesh —
+    the shard_scale protocol (pre-placed W/vectors, so timings measure the
+    decision program, not host->device copies)."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.shardgp import ShardedScorer
+    from repro.shardgp.score import P_MODELS, P_W
+
+    rng = np.random.default_rng(0)
+    num_tenants = max(8, min(256, n // 64))
+    cap = ((n + shards - 1) // shards) * shards
+    W, alpha, mu0, kdiag, best, member, cost, selected = _synthetic_state(
+        cap, num_tenants, rng)
+    sc = ShardedScorer(shards, topk=TOPK)
+    sc.refresh(member, cost)
+    W = jax.device_put(W, NamedSharding(sc.mesh, P_W))
+    mu0 = jax.device_put(mu0, NamedSharding(sc.mesh, P_MODELS))
+    kdiag = jax.device_put(kdiag, NamedSharding(sc.mesh, P_MODELS))
+    selected = jax.device_put(selected, NamedSharding(sc.mesh, P_MODELS))
+    return sc, (W, alpha, mu0, kdiag, best, selected)
+
+
+def bench_attribution() -> None:
+    from repro.obs import Tracer, aggregate_spans
+
+    iters = 5 if FAST else 20
+    for n in _sizes():
+        for s in _mesh_sizes():
+            sc, args = _setup(n, s)
+            fused_us = time_us(sc.readout_decide_topk, *args,
+                               iters=iters, warmup=2, sync=True)
+
+            tr = Tracer(enabled=True)
+            sc.tracer = tr
+            for _ in range(2):              # compile all three phases
+                sc.readout_decide_topk_phased(*args)
+            tr.spans.clear()
+            for i in range(iters):
+                tr.begin_trace(i)
+                with tr.span("decide"):
+                    sc.readout_decide_topk_phased(*args)
+
+            agg = aggregate_spans(tr.records())
+            root_us = agg["decide"]["total_us"]
+            phases = {p: agg[f"decide/{p}"]["total_us"] / iters
+                      for p in ("readout", "score_topk", "gather_pick")}
+            attributed = 100.0 * sum(phases.values()) * iters / root_us
+            emit(f"decision_trace_L{n}_S{s}", root_us / iters,
+                 live_models=n, shards=s, k_obs=K_OBS, topk=TOPK,
+                 readout_us=f"{phases['readout']:.1f}",
+                 score_topk_us=f"{phases['score_topk']:.1f}",
+                 gather_pick_us=f"{phases['gather_pick']:.1f}",
+                 fused_us=f"{fused_us:.1f}",
+                 attributed_pct=f"{attributed:.2f}")
+            # the tentpole acceptance bar, enforced at measurement time
+            assert FAST or n < 100_000 or attributed >= 90.0, (
+                f"spans attribute only {attributed:.1f}% of the "
+                f"L={n} S={s} decision (need >= 90%)")
+
+
+def bench_disabled_overhead() -> None:
+    from repro.obs import Tracer
+
+    iters = 10 if FAST else 30
+    nt = Tracer(enabled=False)
+    for n in _sizes():
+        for s in _mesh_sizes():
+            sc, args = _setup(n, s)
+
+            def bare():
+                return sc.readout_decide_topk(*args)
+
+            def instrumented(call=bare):
+                # the engine's per-decision span-site stack, tracer off:
+                # every site is one branch + one shared no-op __enter__/__exit__
+                nt.begin_trace(0)
+                with nt.span("event", kind="finish"):
+                    with nt.span("decide", device=0):
+                        with nt.span("posterior", scorer="sharded"):
+                            pass
+                        with nt.span("score", scorer="sharded"):
+                            with nt.span("pad_upload"):
+                                pass
+                            with nt.span("shard_decide", shards=s,
+                                         kernel="xla"):
+                                return nt.sync(call())
+
+            bare_us = time_us(bare, iters=iters, warmup=2, sync=True)
+            wrapped_us = time_us(instrumented, iters=iters, warmup=2,
+                                 sync=True)
+            # the gating number: the disabled stack measured alone, not as
+            # the difference of two noisy ~100ms decision means
+            site_us = time_us(lambda: instrumented(call=lambda: None),
+                              iters=300 if FAST else 2000, warmup=50)
+            overhead = 100.0 * site_us / bare_us
+            emit(f"decision_overhead_L{n}_S{s}", site_us,
+                 live_models=n, shards=s, bare_us=f"{bare_us:.1f}",
+                 wrapped_us=f"{wrapped_us:.1f}",
+                 paired_delta_pct=f"{100 * (wrapped_us - bare_us) / bare_us:.3f}",
+                 overhead_pct=f"{overhead:.4f}")
+            assert FAST or n < 100_000 or overhead < 1.0, (
+                f"disabled-tracer overhead {overhead:.2f}% at L={n} S={s} "
+                "(need < 1%)")
+
+
+def main() -> None:
+    bench_attribution()
+    bench_disabled_overhead()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="toy shapes (same effect as BENCH_FAST=1)")
+    if p.parse_args().smoke:
+        common.set_fast(True)
+    common.begin_suite("decision_trace")
+    main()
+    path = common.end_suite()
+    if path is not None:
+        print(f"# wrote {path}", file=sys.stderr)

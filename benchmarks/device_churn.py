@@ -30,15 +30,13 @@ leaves, preemptions overlaid on tenant churn):
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.devplane import AutoscalePolicy, DevPlaneEngine, two_class_registry
 from repro.stream import device_churn_trace
 
 from . import common
-from .common import emit
+from .common import emit, timed
 
 
 def _wave_trace(sessions: int, slices: int):
@@ -67,9 +65,7 @@ def bench_assign() -> None:
     for assign in ("sequential", "batched"):
         run(assign)                       # warm the jit caches (all k's)
     for assign in ("sequential", "batched"):
-        t0 = time.perf_counter()
-        res, eng = run(assign)
-        wall = time.perf_counter() - t0
+        wall, (res, eng) = timed(run, assign)
         s = res.telemetry.summary()
         emit(
             f"device_churn_assign_{assign}",

@@ -26,7 +26,6 @@ Four measurements:
 from __future__ import annotations
 
 import tempfile
-import time
 from pathlib import Path
 
 import numpy as np
@@ -36,7 +35,7 @@ from repro.core.fleet import Fleet
 from repro.core.tenancy import _matern_block_chol
 from repro.stream import EventLog, StreamEngine, poisson_churn_trace, recover
 
-from .common import FAST, emit, time_us
+from .common import FAST, emit, time_us, timed
 
 
 def _churned_plane(tenants: int, m: int, shards: int) -> ControlPlane:
@@ -63,17 +62,15 @@ def bench_compaction_modes() -> None:
     m, shards = 16, 8
 
     cp = _churned_plane(tenants, m, shards)
-    t0 = time.perf_counter()
-    remap = cp.compact(1.05)
-    full_us = (time.perf_counter() - t0) * 1e6
+    full_s, remap = timed(cp.compact, 1.05)
+    full_us = full_s * 1e6
 
     cp2 = _churned_plane(tenants, m, shards)
     pass_us: list[float] = []
     moves = 0
     while True:
-        t0 = time.perf_counter()
-        r = cp2.compact(1.05, max_moves=1)
-        dt = (time.perf_counter() - t0) * 1e6
+        pass_s, r = timed(cp2.compact, 1.05, max_moves=1)
+        dt = pass_s * 1e6
         if not r:
             break
         pass_us.append(dt)
@@ -145,17 +142,13 @@ def bench_snapshot_restore_append() -> None:
 
 def bench_end_to_end_overhead() -> None:
     trace, make = _trace_and_factory()
-    t0 = time.perf_counter()
     plain_eng = make()
-    plain_eng.run(trace)
-    plain_s = time.perf_counter() - t0
+    plain_s, _ = timed(plain_eng.run, trace)
 
     with tempfile.TemporaryDirectory() as d:
-        t0 = time.perf_counter()
         eng = make(log=EventLog(Path(d) / "log"),
                    snapshot_root=str(Path(d) / "snap"), snapshot_every=32)
-        eng.run(trace)
-        durable_s = time.perf_counter() - t0
+        durable_s, _ = timed(eng.run, trace)
         eng.log.close()
         snapshots = len(list((Path(d) / "snap").glob("step_*")))
 

@@ -19,6 +19,9 @@ Sections (default: all):
             device-aware vs speed-oblivious regret, autoscale (device_churn)
   eventlog  event-sourced durability: incremental vs full compaction pause,
             snapshot/restore/log-append cost (eventlog, DESIGN.md §12)
+  dtrace    span-level cost attribution of one sharded decision + the
+            disabled-tracer overhead bar (decision_trace, DESIGN.md §13;
+            multi-shard rows need forced host devices)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -46,14 +49,15 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "devchurn", "eventlog", "roofline")
+            "devchurn", "eventlog", "dtrace", "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
     "fig2": "fig2", "fig3": "fig3", "fig4": "fig4", "fig5": "fig5",
     "control": "control_plane", "stream": "stream_churn",
     "shard": "shard_scale", "devchurn": "device_churn",
-    "eventlog": "eventlog", "roofline": "roofline",
+    "eventlog": "eventlog", "dtrace": "decision_trace",
+    "roofline": "roofline",
 }
 
 
@@ -109,6 +113,8 @@ def main() -> None:
                 from . import device_churn as m
             elif section == "eventlog":
                 from . import eventlog as m
+            elif section == "dtrace":
+                from . import decision_trace as m
             elif section == "roofline":
                 from . import roofline as m
             else:

@@ -30,11 +30,10 @@ k_obs * 1M * 4 bytes).
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
-from .common import FAST, emit, time_us
+from .common import FAST, emit, time_us, timed
 
 K_OBS = 64          # observed-set rows of the synthetic W readout buffer
 TOPK = 4
@@ -97,11 +96,8 @@ def _bench_decide(n: int, shards: int, iters: int) -> float:
     kdiag = jax.device_put(kdiag, NamedSharding(sc.mesh, P_MODELS))
     selected = jax.device_put(selected, NamedSharding(sc.mesh, P_MODELS))
 
-    def decide():
-        return jax.block_until_ready(sc.readout_decide_topk(
-            W, alpha, mu0, kdiag, best, selected))
-
-    return time_us(decide, iters=iters, warmup=2)
+    return time_us(sc.readout_decide_topk, W, alpha, mu0, kdiag, best,
+                   selected, iters=iters, warmup=2, sync=True)
 
 
 def bench_strong_and_weak_scaling() -> None:
@@ -152,9 +148,8 @@ def bench_compaction_pause() -> None:
     # retire every other tenant -> skewed spans, lots of movable blocks
     for t in range(0, tenants, 2):
         cp.retire_tenant(t)
-    t0 = time.perf_counter()
-    remap = cp.compact(1.05)
-    pause_us = (time.perf_counter() - t0) * 1e6
+    pause_s, remap = timed(cp.compact, 1.05)
+    pause_us = pause_s * 1e6
     emit(f"shard_compaction_L{tenants * m}", pause_us,
          tenants_live=tenants // 2, moves=len(remap), shards=shards,
          imbalance_after=f"{cp._layout.imbalance():.2f}")

@@ -26,20 +26,17 @@ from repro.core.fleet import Fleet
 from repro.core.tenancy import _matern_block_chol
 from repro.stream import StreamEngine, poisson_churn_trace
 
-from .common import FAST, emit, time_us
+from .common import FAST, emit, time_us, timed
 
 
 def bench_end_to_end() -> None:
-    import time
     sessions = 50 if FAST else 200
     trace = poisson_churn_trace(
         num_sessions=sessions, arrival_rate=1.0, seed=0,
         m_min=2, m_max=16, session_scale=25.0, num_failure_slices=2)
     eng = StreamEngine(Fleet.partition_pod(256, 8), "mdmt", seed=0,
                        max_live_models=120)
-    t0 = time.perf_counter()
-    res = eng.run(trace)
-    wall = time.perf_counter() - t0
+    wall, res = timed(eng.run, trace)
     s = res.telemetry.summary()
     events = trace.num_events + s["trials"]
     emit(
@@ -106,11 +103,8 @@ def bench_decision_at_scale() -> None:
                 return cp._sharded.decide_topk(mu, sd, cp._best_j,
                                                cp.selected)
 
-        def decide_sync():
-            return jax.block_until_ready(decide())
-
-        us = time_us(decide_sync, iters=10 if FAST else 30,
-                     warmup=2 if FAST else 5)
+        us = time_us(decide, iters=10 if FAST else 30,
+                     warmup=2 if FAST else 5, sync=True)
         shards = cp._sharded.num_shards if scorer == "sharded" else 1
         emit(f"stream_decision_{scorer}_L{n_live}", us,
              tenants=tenants, live_models=n_live, shards=shards)

@@ -10,11 +10,18 @@ overlaid on the tenant churn, joint batched assignment, and an autoscaler.
 ``--crash-at N`` demos the event-sourced crash recovery (DESIGN.md §12):
 the run is killed at processed event N, rebuilt from its durable log +
 newest snapshot, resumed, and compared against an uninterrupted run.
+``--trace`` runs with the obs planes live (decision-path spans + metrics
+registry, DESIGN.md §13) and re-runs untraced to verify the observation-only
+guarantee: both trial sequences must be byte-identical.  ``--report-dir
+PATH`` renders the per-run experiment directory (``PATH/<run_id>/`` with
+summary.json, timeline.csv, self-contained report.html).
 Used by CI as a smoke test:
 
   PYTHONPATH=src python examples/streaming_service.py --events 50
   PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
   PYTHONPATH=src python examples/streaming_service.py --events 50 --crash-at 40
+  PYTHONPATH=src python examples/streaming_service.py --events 60 --trace \\
+      --report-dir obs_report
 """
 
 from __future__ import annotations
@@ -89,6 +96,14 @@ def main() -> None:
                         "(DESIGN.md §12)")
     p.add_argument("--telemetry-json", default=None,
                    help="optional path for the full telemetry dump")
+    p.add_argument("--trace", action="store_true",
+                   help="run with decision-path tracing + metrics enabled, "
+                        "then verify against an untraced twin run that "
+                        "tracing changed no decision (DESIGN.md §13)")
+    p.add_argument("--report-dir", default=None, metavar="PATH",
+                   help="write the per-run experiment directory "
+                        "(PATH/<run_id>/ with summary.json, timeline.csv, "
+                        "report.html) — works with or without --trace")
     args = p.parse_args()
 
     sessions = max(1, args.events // 2)
@@ -112,6 +127,12 @@ def main() -> None:
     def make_engine(**kw):
         # a fresh engine (and fresh Fleet — it is mutated) per run: the
         # crash demo needs one for the reference, crashed, and recovered runs
+        if args.trace and "tracer" not in kw:
+            # fresh obs planes per engine — spans/metrics never mix across
+            # the reference, crashed, and recovered runs of the crash demo
+            from repro.obs import MetricsRegistry, Tracer
+            kw["tracer"] = Tracer(enabled=True)
+            kw["metrics"] = MetricsRegistry()
         if args.device_churn:
             reg = two_class_registry(2.0, overhead=0.5, chips=32)
             half = max(1, args.slices // 2)
@@ -151,8 +172,35 @@ def main() -> None:
               f"window [{pd['joined']:.1f}, {left}]  "
               f"trials {pd['trials']:3d}  util {pd['utilization']:.3f}")
     if args.telemetry_json:
-        path = res.telemetry.to_json(args.telemetry_json)
+        path = res.telemetry.to_json(args.telemetry_json,
+                                     metrics=eng.metrics)
         print(f"telemetry -> {path}")
+
+    if args.trace:
+        # the observation-only guarantee (DESIGN.md §13): an untraced twin
+        # of the same run must make byte-identical decisions — spans wrap
+        # the engine's jit programs, they never change them
+        twin = make_engine(tracer=None, metrics=None).run(trace)
+        same = ([dataclasses.astuple(t) for t in res.trials]
+                == [dataclasses.astuple(t) for t in twin.trials])
+        n_spans = len(eng.tracer.records())
+        print(f"\ntraced run: {n_spans} spans over {eng.event_index} events; "
+              f"untraced twin identical={same}")
+        assert same, "tracing changed the decision sequence"
+
+    if args.report_dir:
+        from repro.obs import write_report
+        run_dir = write_report(
+            args.report_dir, trace.name,
+            telemetry=res.telemetry,
+            tracer=eng.tracer if args.trace else None,
+            metrics=eng.metrics,
+            result=res,
+            meta={"policy": args.policy, "slices": args.slices,
+                  "seed": args.seed, "events": trace.num_events,
+                  "traced": args.trace, "wall_s": round(wall, 3),
+                  "slo": {"device_utilization": 0.25, "ttfo_p99": 100.0}})
+        print(f"report -> {run_dir}")
 
     # smoke-test invariants: the run must have actually served tenants
     assert s["sessions"] == sessions

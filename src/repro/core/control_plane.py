@@ -59,6 +59,7 @@ from .ei import (
 )
 from .gp import DEFAULT_JITTER, BlockIncrementalGP, make_gp
 from .tenancy import Problem
+from repro.obs import NULL_TRACER
 
 SCORERS = ("fused", "ops", "sharded")
 
@@ -173,6 +174,7 @@ class ControlPlane:
         self.gp = BlockIncrementalGP.empty(jitter)
         self.gp.ensure_capacity(cap_n)
         self.rr_pointer = 0
+        self.tracer = NULL_TRACER
         self._rebuild_mirrors()
 
     @classmethod
@@ -223,6 +225,7 @@ class ControlPlane:
         cp._no_obs_floor = no_obs_floor(problem)
         cp.gp = make_gp(problem.K, problem.mu0, problem.membership, jitter)
         cp.rr_pointer = 0
+        cp.tracer = NULL_TRACER
         cp._rebuild_mirrors()
         return cp
 
@@ -526,6 +529,17 @@ class ControlPlane:
         self.gp._dirty = {self._block_ids[t] for t in meta["gp_dirty"]}
         self._rebuild_mirrors()
 
+    # ---- observability (DESIGN.md §13) -------------------------------------
+
+    def set_tracer(self, tracer) -> None:
+        """Install a ``repro.obs.Tracer`` on the decision path (and on the
+        sharded scorer, which opens its own pad/dispatch spans).  Tracing is
+        observation-only: spans never change a decision and never enter
+        :meth:`state_snapshot`."""
+        self.tracer = tracer
+        if self._sharded is not None:
+            self._sharded.tracer = tracer
+
     # ---- event steps -------------------------------------------------------
 
     def best_effective(self) -> np.ndarray:
@@ -543,7 +557,8 @@ class ControlPlane:
 
     def record_observation(self, model: int, z: float) -> None:
         self.observed[model] = True
-        self.gp.observe(model, z)
+        with self.tracer.span("gp_fold", model=model):
+            self.gp.observe(model, z)
         users = np.nonzero(self.membership[:, model])[0]
         for u in users:
             if z > self.best[u] or not np.isfinite(self.best[u]):
@@ -555,33 +570,40 @@ class ControlPlane:
     def choose_mdmt(self, device_speed: float = 1.0) -> tuple[int, int] | None:
         if self.selected.all():
             return None
+        tr = self.tracer
         if self.scorer == "sharded":
             # stay on host buffers until the sharded upload: the block
             # engine's cache is numpy, and float32 sqrt is bit-deterministic,
             # so this matches the fused path's jnp sqrt exactly
-            if hasattr(self.gp, "posterior_host"):
-                mu, var = self.gp.posterior_host()
-                sd = np.sqrt(var)
-            else:
-                mu, sd = self.gp.posterior_sd()
-            idx, score = self._sharded.decide(
-                mu, sd, self._best_j, self.selected, device_speed)
+            with tr.span("posterior", scorer="sharded"):
+                if hasattr(self.gp, "posterior_host"):
+                    mu, var = self.gp.posterior_host()
+                    sd = np.sqrt(var)
+                else:
+                    mu, sd = tr.sync(self.gp.posterior_sd())
+            with tr.span("score", scorer="sharded"):
+                idx, score = self._sharded.decide(
+                    mu, sd, self._best_j, self.selected, device_speed)
             if not np.isfinite(score) or score <= -1e29:
                 return None
             return idx, -1
-        mu, sd = self.gp.posterior_sd()
+        with tr.span("posterior", scorer=self.scorer):
+            mu, sd = tr.sync(self.gp.posterior_sd())
         cost = self._cost_j if device_speed == 1.0 else self._cost_j / device_speed
-        if self.scorer == "ops":
-            from repro.kernels import ops
-            scores = ops.eirate(
-                mu, sd, self._best_j, self._membership_j, cost,
-                self._selected_j, use_pallas=jax.default_backend() == "tpu")
-            idx = jnp.argmax(scores)
-            idx, score = int(idx), float(scores[idx])
-        else:
-            idx, score = choose_next_fused(
-                mu, sd, self._best_j, self._membership_j, cost, self._selected_j)
-            idx, score = int(idx), float(score)
+        with tr.span("score", scorer=self.scorer):
+            if self.scorer == "ops":
+                from repro.kernels import ops
+                scores = ops.eirate(
+                    mu, sd, self._best_j, self._membership_j, cost,
+                    self._selected_j,
+                    use_pallas=jax.default_backend() == "tpu")
+                idx = jnp.argmax(scores)
+                idx, score = int(idx), float(scores[idx])
+            else:
+                idx, score = choose_next_fused(
+                    mu, sd, self._best_j, self._membership_j, cost,
+                    self._selected_j)
+                idx, score = int(idx), float(score)
         if not np.isfinite(score) or score <= -1e29:
             return None
         return idx, -1
@@ -607,28 +629,34 @@ class ControlPlane:
             C = rates_j.shape[0]
             return (np.full((C, k), -np.inf, np.float32),
                     np.zeros((C, k), np.int64))
+        tr = self.tracer
         if self.scorer == "sharded":
-            if hasattr(self.gp, "posterior_host"):
-                mu, var = self.gp.posterior_host()
-                sd = np.sqrt(var)
-            else:
-                mu, sd = self.gp.posterior_sd()
-            v, g = self._sharded.decide_topk_classes(
-                mu, sd, self._best_j, self.selected, rates_j, over_j, k=k)
-            return np.asarray(v), np.asarray(g)
-        mu, sd = self.gp.posterior_sd()
+            with tr.span("posterior", scorer="sharded"):
+                if hasattr(self.gp, "posterior_host"):
+                    mu, var = self.gp.posterior_host()
+                    sd = np.sqrt(var)
+                else:
+                    mu, sd = tr.sync(self.gp.posterior_sd())
+            with tr.span("score_topk", scorer="sharded", k=k):
+                v, g = self._sharded.decide_topk_classes(
+                    mu, sd, self._best_j, self.selected, rates_j, over_j, k=k)
+                return np.asarray(v), np.asarray(g)
+        with tr.span("posterior", scorer=self.scorer):
+            mu, sd = tr.sync(self.gp.posterior_sd())
         cm = self._cost_j[None, :] / rates_j[:, None] + over_j[:, None]
-        if self.scorer == "ops":
-            from repro.kernels import ops
-            scores = ops.eirate_classes(
-                mu, sd, self._best_j, self._membership_j, cm,
-                self._selected_j, use_pallas=jax.default_backend() == "tpu")
-            v, i = topk_rows_padded(scores, k)
-        else:
-            v, i = choose_topk_classes(
-                mu, sd, self._best_j, self._membership_j, cm,
-                self._selected_j, k=k)
-        return np.asarray(v), np.asarray(i)
+        with tr.span("score_topk", scorer=self.scorer, k=k):
+            if self.scorer == "ops":
+                from repro.kernels import ops
+                scores = ops.eirate_classes(
+                    mu, sd, self._best_j, self._membership_j, cm,
+                    self._selected_j,
+                    use_pallas=jax.default_backend() == "tpu")
+                v, i = topk_rows_padded(scores, k)
+            else:
+                v, i = choose_topk_classes(
+                    mu, sd, self._best_j, self._membership_j, cm,
+                    self._selected_j, k=k)
+            return np.asarray(v), np.asarray(i)
 
     def _users_with_work(self) -> np.ndarray:
         has_work = (self.membership & ~self.selected[None, :]).any(axis=1)

@@ -268,13 +268,20 @@ class DevPlaneEngine(StreamEngine):
                 rates, overheads = self.registry.rows(cls_names)
 
             t0 = _time.perf_counter()
-            vals, gids = self.cp.choose_mdmt_batch(
-                rates, overheads, k=len(devices))
-            self._decision_seconds += _time.perf_counter() - t0
+            with self.tracer.span("decide", batch=len(devices),
+                                  classes=len(cls_names)):
+                vals, gids = self.cp.choose_mdmt_batch(
+                    rates, overheads, k=len(devices))
+            dt = _time.perf_counter() - t0
+            self._decision_seconds += dt
             self._decisions += 1
             self._scoring_passes += 1
+            if self.metrics is not None:
+                self._m_decision_s.observe(dt)
+                self.metrics.counter("engine.scoring_passes").inc()
 
-            pairs = greedy_assign(vals, gids, rows)
+            with self.tracer.span("assign", batch=len(devices)):
+                pairs = greedy_assign(vals, gids, rows)
             if not pairs:
                 return                 # pool exhausted for every free device
             for pos, model in pairs:

@@ -1,0 +1,38 @@
+"""Zero-dependency observability layer: tracing, metrics, reports.
+
+The service's innermost hot path — one sharded GP-EI decision — is also its
+scaling ceiling (BENCH_shard_scale.json: ~220ms at |L|=100k, weak-scaling
+efficiency 0.16 at 8 shards).  You cannot tune what you cannot observe, so
+this package gives the control plane three observation planes (DESIGN.md
+§13):
+
+  trace.py    :class:`Tracer` — nestable monotonic-clock spans with
+              deterministic (trace, span) ids, a ``block_until_ready``-aware
+              sync so device work is attributed to the span that launched
+              it, and an optional ``jax.profiler`` trace-annotation bridge
+              (spans show up in TensorBoard/Perfetto device profiles).
+              Disabled tracers cost one branch per span site (<1% of a
+              decision, measured in BENCH_decision_trace.json).
+
+  metrics.py  :class:`MetricsRegistry` — counters, gauges, and fixed-bucket
+              histograms with p50/p99 snapshots.  The streaming engines feed
+              it (decisions, decision latency, queue depth, compaction
+              pause, snapshot latency, per-device busy fraction) and the
+              snapshot exports through the existing telemetry JSON sink.
+
+  report.py   :func:`write_report` — one experiment directory per run
+              (``reports/<run_id>/`` with ``summary.json``,
+              ``timeline.csv``, a self-contained ``report.html`` and the
+              raw ``trace.json``), rendered from telemetry + trace + metrics
+              payloads.  The multi-tenant operator view.
+
+Everything here is observation-only: a traced run's trial sequence is
+byte-identical to an untraced run's (CI asserts it), spans/metrics never
+enter engine snapshots, and trace ids are derived from processed-event
+indices so a crash-recovered run re-emits the identical span tree for the
+replayed suffix (tests/test_obs.py).
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .report import aggregate_spans, write_report  # noqa: F401
+from .trace import NULL_TRACER, Tracer  # noqa: F401

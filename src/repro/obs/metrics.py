@@ -1,0 +1,185 @@
+"""Service metrics registry: counters, gauges, fixed-bucket histograms.
+
+The lightweight, zero-dependency registry the streaming engines feed
+(DESIGN.md §13): decision counts and latency, admission-queue depth,
+compaction pause, snapshot latency, per-device busy fraction.  Everything
+is a plain Python accumulator — no locks (the engines are single-threaded
+event loops), no background threads, no exporters.  ``snapshot()`` returns
+a JSON-able dict that rides along in the telemetry sink's payload
+(``TelemetrySink.to_json(metrics=...)``) and the per-run report
+(``obs/report.py``).
+
+Metrics are observation-only by construction: they never enter engine
+snapshots and the crash-anywhere replay oracle never compares them, so
+wall-clock-valued histograms cannot break byte-identical replay.
+
+Histograms use fixed bucket upper bounds (default: 5 buckets per decade
+from 1µs to 100s — trial durations and decision latencies both fit).
+``percentile(q)`` interpolates linearly inside the located bucket and
+clamps to the observed min/max, so p50/p99 are bucket-resolution estimates,
+not exact order statistics — the right trade for an always-on hot-path
+counter.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def _default_time_buckets() -> tuple[float, ...]:
+    # 5 per decade, 1e-6s .. 1e2s: 41 finite bounds + implicit overflow
+    return tuple(10.0 ** (-6 + i / 5) for i in range(41))
+
+
+DEFAULT_TIME_BUCKETS = _default_time_buckets()
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-set value, plus the max ever set (queue-depth style series
+    often only need "current" and "worst")."""
+
+    __slots__ = ("value", "max")
+
+    def __init__(self):
+        self.value = None
+        self.max = None
+
+    def set(self, v: float) -> None:
+        self.value = v
+        self.max = v if self.max is None else max(self.max, v)
+
+
+class Histogram:
+    """Fixed-bucket histogram with p50/p99 snapshot estimates.
+
+    ``bounds`` are ascending finite upper bounds; values above the last
+    bound land in an implicit overflow bucket.  Non-finite observations are
+    counted separately (``dropped``) instead of poisoning the stats.
+    """
+
+    __slots__ = ("bounds", "counts", "count", "total", "min", "max",
+                 "dropped")
+
+    def __init__(self, bounds: tuple[float, ...] = DEFAULT_TIME_BUCKETS):
+        if list(bounds) != sorted(bounds) or len(bounds) == 0:
+            raise ValueError("bounds must be non-empty and ascending")
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)   # + overflow
+        self.count = 0
+        self.total = 0.0
+        self.min = None
+        self.max = None
+        self.dropped = 0
+
+    def observe(self, v: float) -> None:
+        if v is None or not math.isfinite(v):
+            self.dropped += 1
+            return
+        # linear scan is fine: bucket lists are ~40 long and observe() is
+        # called once per *decision*, not per model
+        i = 0
+        for b in self.bounds:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def percentile(self, q: float) -> float | None:
+        """Bucket-interpolated q-th percentile (q in [0, 100]); None when
+        empty."""
+        if self.count == 0:
+            return None
+        target = q / 100.0 * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.bounds[i - 1] if i > 0 else (
+                    self.min if self.min is not None else 0.0)
+                hi = self.bounds[i] if i < len(self.bounds) else (
+                    self.max if self.max is not None else lo)
+                frac = (target - cum) / c
+                est = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                return float(min(max(est, self.min), self.max))
+            cum += c
+        return float(self.max)   # pragma: no cover - cum==count handled above
+
+    def summary(self) -> dict:
+        mean = self.total / self.count if self.count else None
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": self.min,
+            "max": self.max,
+            "mean": mean,
+            "p50": self.percentile(50),
+            "p99": self.percentile(99),
+            "dropped_non_finite": self.dropped,
+        }
+
+
+class MetricsRegistry:
+    """Named metric store with get-or-create accessors.  Asking for an
+    existing name with the same kind returns the same object (engines cache
+    handles at construction; ad-hoc callers just look up by name)."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def _check_free(self, name: str, own: dict) -> None:
+        for kind in (self._counters, self._gauges, self._histograms):
+            if kind is not own and name in kind:
+                raise ValueError(f"metric {name!r} already registered "
+                                 "with a different kind")
+
+    def counter(self, name: str) -> Counter:
+        self._check_free(name, self._counters)
+        return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        self._check_free(name, self._gauges)
+        return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str,
+                  bounds: tuple[float, ...] | None = None) -> Histogram:
+        self._check_free(name, self._histograms)
+        h = self._histograms.get(name)
+        if h is None:
+            h = Histogram(bounds or DEFAULT_TIME_BUCKETS)
+            self._histograms[name] = h
+        return h
+
+    def snapshot(self) -> dict:
+        """JSON-able dump of every metric — the payload that rides in the
+        telemetry sink's ``to_json`` and the per-run report."""
+        return {
+            "counters": {k: c.value
+                         for k, c in sorted(self._counters.items())},
+            "gauges": {k: {"value": g.value, "max": g.max}
+                       for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._histograms.items())},
+        }
+
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "DEFAULT_TIME_BUCKETS"]

@@ -38,6 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.ei import NEG_INF, ei_total
+from repro.obs import NULL_TRACER
 from repro.sharding.rules import SCORING_RULES
 
 # shard_map moved from jax.experimental to the jax namespace (and its
@@ -107,11 +108,16 @@ def _score_local(mu, sd, best, member, cost, selected, speed, kernel: str, k: in
 
 @functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
 def _decide(mu, sd, best, member, cost, selected, speed, *, mesh, kernel, k):
+    # named_scope annotations land in device profiles (TensorBoard/Perfetto)
+    # next to the host spans the obs tracer bridges in — same taxonomy as
+    # the phase-split programs below (DESIGN.md §13)
     def local(mu, sd, best, member, cost, selected, speed):
-        v, g = _score_local(mu, sd, best, member, cost, selected, speed,
-                            kernel, k)
-        allv = jax.lax.all_gather(v, "shard").reshape(-1)
-        allg = jax.lax.all_gather(g, "shard").reshape(-1)
+        with jax.named_scope("score_topk"):
+            v, g = _score_local(mu, sd, best, member, cost, selected, speed,
+                                kernel, k)
+        with jax.named_scope("all_gather"):
+            allv = jax.lax.all_gather(v, "shard").reshape(-1)
+            allg = jax.lax.all_gather(g, "shard").reshape(-1)
         return allv, allg
     allv, allg = shard_map(
         local, mesh=mesh,
@@ -120,7 +126,8 @@ def _decide(mu, sd, best, member, cost, selected, speed, *, mesh, kernel, k):
         out_specs=(P(None), P(None)),
         **_NO_REP_CHECK,
     )(mu, sd, best, member, cost, selected, speed)
-    return _global_pick(allv, allg, k)
+    with jax.named_scope("global_pick"):
+        return _global_pick(allv, allg, k)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
@@ -179,12 +186,15 @@ def _readout_decide(W, alpha, mu0, kdiag, best, member, cost, selected, speed,
 
     def local(W, alpha, mu0, kdiag, best, member, cost, selected, speed):
         from repro.kernels import ops
-        mu, sd = ops.gp_readout(W, alpha, mu0, kdiag, emit_sd=True,
-                                use_pallas=use_pallas)
-        v, g = _score_local(mu, sd, best, member, cost, selected, speed,
-                            kernel, k)
-        allv = jax.lax.all_gather(v, "shard").reshape(-1)
-        allg = jax.lax.all_gather(g, "shard").reshape(-1)
+        with jax.named_scope("gp_readout"):
+            mu, sd = ops.gp_readout(W, alpha, mu0, kdiag, emit_sd=True,
+                                    use_pallas=use_pallas)
+        with jax.named_scope("score_topk"):
+            v, g = _score_local(mu, sd, best, member, cost, selected, speed,
+                                kernel, k)
+        with jax.named_scope("all_gather"):
+            allv = jax.lax.all_gather(v, "shard").reshape(-1)
+            allg = jax.lax.all_gather(g, "shard").reshape(-1)
         return allv, allg
 
     allv, allg = shard_map(
@@ -194,7 +204,75 @@ def _readout_decide(W, alpha, mu0, kdiag, best, member, cost, selected, speed,
         out_specs=(P(None), P(None)),
         **_NO_REP_CHECK,
     )(W, alpha, mu0, kdiag, best, member, cost, selected, speed)
-    return _global_pick(allv, allg, k)
+    with jax.named_scope("global_pick"):
+        return _global_pick(allv, allg, k)
+
+
+# ---- phase-split programs (span-level cost attribution) ---------------------
+# The SAME pipeline as _readout_decide, cut at its two natural barriers so a
+# host span (with block_until_ready) can time each phase separately.  These
+# are benchmark-only (benchmarks/decision_trace.py): the engines keep the
+# fused program when tracing, so a traced run's decisions stay byte-identical
+# to an untraced run's.
+
+@functools.partial(jax.jit, static_argnames=("mesh", "kernel"))
+def _readout_phase(W, alpha, mu0, kdiag, *, mesh, kernel):
+    """Sharded GP posterior readout only -> (mu, sd), model-sharded."""
+    use_pallas = kernel != "xla"
+
+    def local(W, alpha, mu0, kdiag):
+        from repro.kernels import ops
+        with jax.named_scope("gp_readout"):
+            return ops.gp_readout(W, alpha, mu0, kdiag, emit_sd=True,
+                                  use_pallas=use_pallas)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P_W, P_OBS, P_MODELS, P_MODELS),
+        out_specs=(P_MODELS, P_MODELS),
+        **_NO_REP_CHECK,
+    )(W, alpha, mu0, kdiag)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "kernel", "k"))
+def _local_candidates(mu, sd, best, member, cost, selected, speed,
+                      *, mesh, kernel, k):
+    """Per-shard score + local top-k, candidates left shard-resident (the
+    (S*k,) outputs are sharded; no cross-shard traffic yet)."""
+
+    def local(mu, sd, best, member, cost, selected, speed):
+        with jax.named_scope("score_topk"):
+            return _score_local(mu, sd, best, member, cost, selected, speed,
+                                kernel, k)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P_MODELS, P_MODELS, P_TENANTS, P_MEMBER,
+                  P_MODELS, P_MODELS, P()),
+        out_specs=(P_MODELS, P_MODELS),
+        **_NO_REP_CHECK,
+    )(mu, sd, best, member, cost, selected, speed)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "k"))
+def _gather_pick(allv, allg, *, mesh, k):
+    """Cross-shard all_gather of the S*k candidates + replicated global
+    pick — the communication epilogue, isolated."""
+
+    def local(v, g):
+        with jax.named_scope("all_gather"):
+            av = jax.lax.all_gather(v, "shard").reshape(-1)
+            ag = jax.lax.all_gather(g, "shard").reshape(-1)
+        with jax.named_scope("global_pick"):
+            vv, pos = jax.lax.top_k(av, k)
+            return vv, ag[pos]
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P_MODELS, P_MODELS),
+        out_specs=(P(None), P(None)),
+        **_NO_REP_CHECK,
+    )(allv, allg)
 
 
 class ShardedScorer:
@@ -217,6 +295,7 @@ class ShardedScorer:
         self.num_shards = mesh.devices.size
         self.topk = max(1, topk)
         self.kernel = kernel
+        self.tracer = NULL_TRACER   # installed by ControlPlane.set_tracer
         self._member = None     # (N_cap, cap) device-resident, P(None, shard)
         self._cost = None       # (cap,) device-resident, P(shard)
         self._cap = 0
@@ -256,13 +335,17 @@ class ShardedScorer:
         """(values (k,), global ids (k,)) of the global EIrate top-k."""
         if self._member is None:
             raise RuntimeError("refresh() must run before decide()")
-        mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
-        sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
-        sel = self._pad(np.asarray(selected), True, bool)
-        return _decide(
-            mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
-            self._cost, sel, jnp.float32(speed),
-            mesh=self.mesh, kernel=self.kernel, k=self.topk)
+        tr = self.tracer
+        with tr.span("pad_upload"):
+            mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
+            sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
+            sel = self._pad(np.asarray(selected), True, bool)
+        with tr.span("shard_decide", shards=self.num_shards,
+                     kernel=self.kernel):
+            return tr.sync(_decide(
+                mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
+                self._cost, sel, jnp.float32(speed),
+                mesh=self.mesh, kernel=self.kernel, k=self.topk))
 
     def decide(self, mu, sd, best, selected,
                speed: float = 1.0) -> tuple[int, float]:
@@ -281,14 +364,18 @@ class ShardedScorer:
         if self._member is None:
             raise RuntimeError("refresh() must run before decide()")
         k = self.topk if k is None else max(1, k)
-        mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
-        sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
-        sel = self._pad(np.asarray(selected), True, bool)
-        return _decide_classes(
-            mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
-            self._cost, sel, jnp.asarray(rates, dtype=jnp.float32),
-            jnp.asarray(overheads, dtype=jnp.float32),
-            mesh=self.mesh, kernel=self.kernel, k=k)
+        tr = self.tracer
+        with tr.span("pad_upload"):
+            mu = self._pad(np.asarray(mu, dtype=np.float32), 0.0, np.float32)
+            sd = self._pad(np.asarray(sd, dtype=np.float32), 0.0, np.float32)
+            sel = self._pad(np.asarray(selected), True, bool)
+        with tr.span("shard_decide", shards=self.num_shards,
+                     kernel=self.kernel, k=k):
+            return tr.sync(_decide_classes(
+                mu, sd, jnp.asarray(best, dtype=jnp.float32), self._member,
+                self._cost, sel, jnp.asarray(rates, dtype=jnp.float32),
+                jnp.asarray(overheads, dtype=jnp.float32),
+                mesh=self.mesh, kernel=self.kernel, k=k))
 
     def readout_decide_topk(self, W, alpha, mu0, kdiag, best, selected,
                             speed: float = 1.0):
@@ -302,3 +389,27 @@ class ShardedScorer:
             self._member, self._cost, jnp.asarray(selected),
             jnp.float32(speed), mesh=self.mesh, kernel=self.kernel,
             k=self.topk)
+
+    def readout_decide_topk_phased(self, W, alpha, mu0, kdiag, best,
+                                   selected, speed: float = 1.0):
+        """The same pipeline as :meth:`readout_decide_topk`, run as three
+        separately jitted phases — readout, local score+top-k, cross-shard
+        gather+pick — each closed under a ``tracer.span`` with a
+        ``block_until_ready`` sync, so the tracer attributes the decision's
+        wall time phase by phase.  Benchmark-only: the extra dispatch
+        boundaries forfeit fusion, so the engines never take this path."""
+        if self._member is None:
+            raise RuntimeError("refresh() must run before decide()")
+        tr = self.tracer
+        best_j = jnp.asarray(best, dtype=jnp.float32)
+        sel_j = jnp.asarray(selected)
+        speed_j = jnp.float32(speed)
+        with tr.span("readout", shards=self.num_shards):
+            mu, sd = tr.sync(_readout_phase(
+                W, alpha, mu0, kdiag, mesh=self.mesh, kernel=self.kernel))
+        with tr.span("score_topk", shards=self.num_shards, k=self.topk):
+            v, g = tr.sync(_local_candidates(
+                mu, sd, best_j, self._member, self._cost, sel_j, speed_j,
+                mesh=self.mesh, kernel=self.kernel, k=self.topk))
+        with tr.span("gather_pick", shards=self.num_shards, k=self.topk):
+            return tr.sync(_gather_pick(v, g, mesh=self.mesh, k=self.topk))

@@ -53,6 +53,7 @@ import numpy as np
 from repro.core.control_plane import ControlPlane, tenant_warm_models
 from repro.core.fleet import DeviceSlice, Fleet
 from repro.core.scheduler import POLICIES
+from repro.obs import NULL_TRACER
 
 from .eventlog import EventLog, FaultInjector
 from .telemetry import TelemetrySink
@@ -131,6 +132,8 @@ class StreamEngine:
         snapshot_root: str | None = None,
         snapshot_every: int | None = None,
         fault: FaultInjector | None = None,
+        tracer=None,
+        metrics=None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
@@ -159,6 +162,22 @@ class StreamEngine:
                                num_shards=num_shards,
                                score_kernel=score_kernel)
         self._chooser = self.cp.chooser(policy)
+        # observability (DESIGN.md §13): both planes are observation-only —
+        # spans/metrics never enter snapshots or the replay oracle's
+        # comparisons, and a traced run's trial sequence is byte-identical
+        # to an untraced one (tested).  trace_id == event_index, so a
+        # recovered run re-emits the replayed suffix's span tree exactly.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.cp.set_tracer(self.tracer)
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_events = metrics.counter("engine.events")
+            self._m_launches = metrics.counter("engine.launches")
+            self._m_decision_s = metrics.histogram("engine.decision_seconds")
+            self._m_compact_s = metrics.histogram(
+                "engine.compaction_pause_seconds")
+            self._m_snapshot_s = metrics.histogram("engine.snapshot_seconds")
+            self._m_queue = metrics.gauge("engine.queue_depth")
 
         # mirrors scheduler.simulate's free-device stack: initial pop order is
         # slice M-1, M-2, ...; freed slices are re-pushed on top
@@ -265,8 +284,12 @@ class StreamEngine:
     def _run_compaction(self) -> None:
         """Rebalance idle tenant blocks across shard spans and remap every
         engine-side structure that holds global model ids."""
-        remap = self.cp.compact(self.compact_imbalance,
-                                max_moves=self.compact_max_moves)
+        t0 = _time.perf_counter()
+        with self.tracer.span("compaction"):
+            remap = self.cp.compact(self.compact_imbalance,
+                                    max_moves=self.compact_max_moves)
+        if self.metrics is not None:
+            self._m_compact_s.observe(_time.perf_counter() - t0)
         self.compaction_move_counts.append(len(remap))
         self._fault("mid_compact")
         if not remap:
@@ -376,17 +399,20 @@ class StreamEngine:
         d = self._free.pop(i)
         s = self.fleet.slices[d]
         owner = self._owner_of_model[model]
-        dur = self._duration_on(model, s)
-        end = self._t + dur
-        self.cp.record_start(model)
-        self._fault("mid_launch")
-        ti = len(self._trials)
-        s.current_trial = ti
-        s.busy_until = end
-        self._trials.append(StreamTrial(
-            model, owner.key, model - owner.model_start, hint, d,
-            self._t, end, None))
-        self._push(end, "finish", (d, model, ti))
+        with self.tracer.span("launch", model=model, device=d):
+            dur = self._duration_on(model, s)
+            end = self._t + dur
+            self.cp.record_start(model)
+            self._fault("mid_launch")
+            ti = len(self._trials)
+            s.current_trial = ti
+            s.busy_until = end
+            self._trials.append(StreamTrial(
+                model, owner.key, model - owner.model_start, hint, d,
+                self._t, end, None))
+            self._push(end, "finish", (d, model, ti))
+        if self.metrics is not None:
+            self._m_launches.inc()
         self.telemetry.on_launch(self._t, owner.key, model, d, dur)
 
     def _duration_on(self, model: int, s) -> float:
@@ -422,9 +448,13 @@ class StreamEngine:
             i = self._pick_free_index()
             s = self.fleet.slices[self._free[i]]
             t0 = _time.perf_counter()
-            pick = self._chooser(device_speed=s.speed)
-            self._decision_seconds += _time.perf_counter() - t0
+            with self.tracer.span("decide", device=self._free[i]):
+                pick = self._chooser(device_speed=s.speed)
+            dt = _time.perf_counter() - t0
+            self._decision_seconds += dt
             self._decisions += 1
+            if self.metrics is not None:
+                self._m_decision_s.observe(dt)
             if pick is None:
                 return
             model, hint = pick
@@ -488,33 +518,49 @@ class StreamEngine:
                 break
             self._t = t
             self.event_index += 1
+            # one trace per processed event; the id IS the event index, so
+            # the log's trace field and a replayed suffix's span tree both
+            # correlate for free
+            self.tracer.begin_trace(self.event_index)
             self._fault("before")
-            if kind == "arrive":
-                self._handle_arrive(*payload)
-            elif kind == "depart":
-                self._handle_depart(*payload)
-            elif kind == "finish":
-                self._handle_finish(*payload)
-            elif kind == "slice_fail":
-                self._handle_slice_fail(*payload)
-            elif kind == "recover":
-                self._handle_recover(*payload)
-            else:
-                self._dispatch_extra(kind, payload)
-            self.log.append_processed(self.event_index, t, kind,
-                                      self._encode_payload(kind, payload))
-            self._post_event(kind)
-            # simultaneous arrivals are admitted as one batch before any
-            # launch — this is what makes the churn-free replay line up with
-            # simulate()'s pre-built warm-start queue
-            if not (kind == "arrive" and self._heap
-                    and self._heap[0][0] == t
-                    and self._heap[0][2] == "arrive"):
-                self._try_launch(horizon)
+            with self.tracer.span("event", kind=kind):
+                if kind == "arrive":
+                    self._handle_arrive(*payload)
+                elif kind == "depart":
+                    self._handle_depart(*payload)
+                elif kind == "finish":
+                    self._handle_finish(*payload)
+                elif kind == "slice_fail":
+                    self._handle_slice_fail(*payload)
+                elif kind == "recover":
+                    self._handle_recover(*payload)
+                else:
+                    self._dispatch_extra(kind, payload)
+                self.log.append_processed(self.event_index, t, kind,
+                                          self._encode_payload(kind, payload),
+                                          trace=self.tracer.current_trace)
+                self._post_event(kind)
+                # simultaneous arrivals are admitted as one batch before any
+                # launch — this is what makes the churn-free replay line up
+                # with simulate()'s pre-built warm-start queue
+                if not (kind == "arrive" and self._heap
+                        and self._heap[0][0] == t
+                        and self._heap[0][2] == "arrive"):
+                    self._try_launch(horizon)
+            if self.metrics is not None:
+                self._m_events.inc()
+                self._m_queue.set(len(self._admission_queue))
             self._fault("after")
             self._maybe_snapshot()
 
         self.telemetry.on_end(self._t, self.fleet.num_devices)
+        if self.metrics is not None:
+            if self._decision_seconds > 0:
+                self.metrics.gauge("engine.decisions_per_s").set(
+                    self._decisions / self._decision_seconds)
+            for d, row in self.telemetry.per_device().items():
+                self.metrics.gauge(f"device.{d}.busy_fraction").set(
+                    row["utilization"])
         return StreamResult(
             trace_name=self._trace_name, policy=self.policy,
             num_devices=self.fleet.num_devices, trials=self._trials,
@@ -533,11 +579,18 @@ class StreamEngine:
 
     def save_snapshot(self):
         """Write a full-state snapshot at the current event boundary via
-        ``checkpoint.store.save_checkpoint`` (atomic publish)."""
+        ``checkpoint.store.save_checkpoint`` (atomic publish).  Snapshot
+        latency is metrics-only, deliberately NOT a span: the replay oracle
+        compares span trees, and a durable run snapshots where its
+        uninterrupted reference does not."""
         from repro.checkpoint.store import save_checkpoint
+        t0 = _time.perf_counter()
         arrays, meta = self._snapshot_state()
-        return save_checkpoint(self.snapshot_root, self.event_index,
-                               arrays, meta)
+        out = save_checkpoint(self.snapshot_root, self.event_index,
+                              arrays, meta)
+        if self.metrics is not None:
+            self._m_snapshot_s.observe(_time.perf_counter() - t0)
+        return out
 
     def _encode_payload(self, kind: str, payload: tuple) -> list:
         """JSON-able encoding of one heap payload (snapshot + processed-log

@@ -14,7 +14,10 @@ event sequence.  This module makes that fold *durable* and *restartable*
     - **processed** records ``(index, t, kind, payload)`` — one per heap pop
       the engine handled, in order.  These are the *audit* stream: a restored
       engine regenerates the suffix, and any divergence from the pre-crash
-      records pinpoints the first event where replay went wrong.
+      records pinpoints the first event where replay went wrong.  With
+      tracing enabled the record grows a fifth field, the obs-plane trace id
+      (``repro.obs.Tracer``), correlating each audit record with its span
+      tree; untraced runs keep the 4-field shape.
 
   With a directory the log is write-through (flushed per append); without
   one it is in-memory only (every engine gets one by default).
@@ -146,8 +149,12 @@ class EventLog:
             self._ext_f.flush()
 
     def append_processed(self, index: int, t: float, kind: str,
-                         data: list) -> None:
-        rec = (index, float(t), kind, data)
+                         data: list, trace: int | None = None) -> None:
+        # ``trace`` is the obs-plane correlation key (the Tracer's trace id
+        # for this event).  It is only materialized when tracing is on, so
+        # untraced runs keep the 4-field record shape byte-for-byte.
+        rec = ((index, float(t), kind, data) if trace is None
+               else (index, float(t), kind, data, trace))
         self.processed.append(rec)
         if self._proc_f is not None:
             self._proc_f.write(json.dumps(rec) + "\n")

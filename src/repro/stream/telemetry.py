@@ -52,7 +52,15 @@ class _DeviceStats:
 
 
 def _pct(values, q) -> float | None:
-    return float(np.percentile(values, q)) if len(values) else None
+    """Percentile over the finite entries, or an explicit None.
+
+    Callers accumulate gaps/latencies incrementally and edge cases (tenant
+    departing before its first observation, a missing sample recorded as
+    None) can leave None or ±inf in the list — filter rather than let
+    ``np.percentile`` fold them into NaN/-inf in ``summary()``."""
+    clean = [v for v in values
+             if v is not None and np.isfinite(v)]
+    return float(np.percentile(clean, q)) if clean else None
 
 
 class TelemetrySink:
@@ -82,7 +90,11 @@ class TelemetrySink:
         st.last_served = t   # staleness clock starts at admission
 
     def on_depart(self, t: float, tenant_key: int) -> None:
-        self.tenants[tenant_key].departed = t
+        # a tenant can depart before the sink ever saw it (e.g. a trace
+        # replayed from mid-stream) — ignore rather than KeyError
+        st = self.tenants.get(tenant_key)
+        if st is not None:
+            st.departed = t
 
     def on_queue_depth(self, t: float, depth: int) -> None:
         self.queue_depth_samples.append((t, depth))
@@ -210,9 +222,14 @@ class TelemetrySink:
     def summary(self) -> dict:
         served = [st for st in self.tenants.values() if st.first_obs is not None]
         ttfo = [st.first_obs - st.arrived for st in served]
-        gaps = [g for st in self.tenants.values() for g in st.serve_gaps]
+        gaps = [g for st in self.tenants.values() for g in st.serve_gaps
+                if g is not None and np.isfinite(g)]
+        # a served tenant has >=1 observation so best_z is finite, but be
+        # explicit: regret stays a finite number or is excluded — summary()
+        # must stay json.dumps(..., allow_nan=False)-clean
         regrets = [st.best_possible - st.best_z for st in served
-                   if np.isfinite(st.best_possible)]
+                   if np.isfinite(st.best_possible)
+                   and np.isfinite(st.best_z)]
         admitted = [st for st in self.tenants.values() if st.admitted is not None]
         left_queued = [st for st in self.tenants.values()
                        if st.departed is not None and st.admitted is None]
@@ -296,13 +313,21 @@ class TelemetrySink:
             }
         return out
 
-    def to_json(self, path: str | Path, include_tenants: bool = True) -> Path:
+    def to_json(self, path: str | Path, include_tenants: bool = True,
+                metrics=None) -> Path:
+        """Write the sink payload; ``metrics`` (a
+        ``repro.obs.MetricsRegistry``) rides along under a ``"metrics"``
+        key in the same schema.  ``allow_nan=False`` is load-bearing: the
+        summary must contain explicit nulls, never NaN/±inf."""
         payload = {"summary": self.summary()}
         if self.devices:
             payload["devices"] = {str(k): v
                                   for k, v in self.per_device().items()}
         if include_tenants:
             payload["tenants"] = {str(k): v for k, v in self.per_tenant().items()}
+        if metrics is not None:
+            payload["metrics"] = metrics.snapshot()
         path = Path(path)
-        path.write_text(json.dumps(payload, indent=2, sort_keys=True))
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True,
+                                   allow_nan=False))
         return path

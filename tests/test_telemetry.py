@@ -1,0 +1,85 @@
+"""TelemetrySink edge cases: tenants departing before their first
+observation, all-None/±inf percentile inputs, and the metrics-registry
+ride-along.  The load-bearing contract: ``summary()`` and ``per_tenant()``
+yield explicit nulls — never NaN/±inf — so every JSON export in the repo
+can run with ``allow_nan=False``."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.obs import MetricsRegistry
+from repro.stream.telemetry import TelemetrySink, _pct
+
+
+def test_depart_before_first_observation_yields_nulls():
+    tel = TelemetrySink()
+    tel.on_arrive(0.0, 7, best_possible=1.0)
+    tel.on_admit(0.1, 7)
+    tel.on_depart(0.5, 7)              # never observed: zero trials ran
+    tel.on_end(1.0, num_slices=2)
+    s = tel.summary()
+    assert s["sessions"] == 1 and s["sessions_served"] == 0
+    assert s["ttfo_p50"] is None and s["ttfo_p99"] is None
+    assert s["serve_gap_p50"] is None and s["serve_gap_max"] is None
+    assert s["tenant_regret_mean"] is None and s["tenant_regret_max"] is None
+    json.dumps(s, allow_nan=False)     # the whole point: no NaN/-inf leaks
+    pt = tel.per_tenant()[7]
+    assert pt["best_z"] is None and pt["regret"] is None
+    json.dumps(pt, allow_nan=False)
+
+
+def test_depart_of_never_seen_tenant_is_ignored():
+    tel = TelemetrySink()
+    tel.on_depart(1.0, 99)             # mid-stream replay: no KeyError
+    assert 99 not in tel.tenants
+    json.dumps(tel.summary(), allow_nan=False)
+
+
+def test_pct_filters_none_and_nonfinite():
+    assert _pct([], 50) is None
+    assert _pct([None, None], 99) is None
+    assert _pct([np.inf, -np.inf, np.nan, None], 50) is None
+    assert _pct([None, 1.0, 3.0, np.inf], 50) == 2.0
+
+
+def test_observation_for_unknown_tenant_counts_busy_only():
+    tel = TelemetrySink()
+    tel.on_observation(1.0, 42, model=3, z=0.5, duration=1.0)
+    assert tel.tenants == {} and tel.busy_seconds == 1.0
+
+
+def test_unknown_best_possible_keeps_regret_null():
+    # a tenant whose true optimum is unknown (best_possible=inf) must not
+    # poison the fleet regret aggregate even after being served
+    tel = TelemetrySink()
+    tel.on_arrive(0.0, 1, best_possible=np.inf)
+    tel.on_admit(0.0, 1)
+    tel.on_observation(1.0, 1, model=0, z=0.7, duration=1.0)
+    tel.on_depart(2.0, 1)
+    tel.on_end(2.0, num_slices=1)
+    s = tel.summary()
+    assert s["sessions_served"] == 1
+    assert s["ttfo_p50"] == 1.0
+    assert s["tenant_regret_mean"] is None
+    assert tel.per_tenant()[1]["regret"] is None
+    json.dumps(s, allow_nan=False)
+
+
+def test_to_json_carries_metrics_snapshot(tmp_path):
+    tel = TelemetrySink()
+    tel.on_arrive(0.0, 1, best_possible=1.0)
+    tel.on_admit(0.0, 1)
+    tel.on_observation(1.0, 1, model=0, z=0.7, duration=1.0)
+    tel.on_end(2.0, num_slices=1)
+    reg = MetricsRegistry()
+    reg.counter("engine.events").inc(5)
+    reg.histogram("engine.decision_seconds").observe(1e-3)
+    path = tel.to_json(tmp_path / "tel.json", metrics=reg)
+    payload = json.loads(path.read_text())
+    assert payload["metrics"]["counters"]["engine.events"] == 5
+    hist = payload["metrics"]["histograms"]["engine.decision_seconds"]
+    assert hist["count"] == 1
+    assert payload["summary"]["trials"] == 0   # launches are engine-side
