@@ -22,6 +22,10 @@ Sections (default: all):
   dtrace    span-level cost attribution of one sharded decision + the
             disabled-tracer overhead bar (decision_trace, DESIGN.md §13;
             multi-shard rows need forced host devices)
+  obs       live health plane: the all-planes-disabled per-event site
+            stack as a share of a decision (< 1% bar) + per-plane enabled
+            costs — export tick, health detectors, forensics record
+            (obs_overhead, DESIGN.md §14)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -49,7 +53,7 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "devchurn", "eventlog", "dtrace", "roofline")
+            "devchurn", "eventlog", "dtrace", "obs", "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
@@ -57,7 +61,7 @@ SUITE_NAMES = {
     "control": "control_plane", "stream": "stream_churn",
     "shard": "shard_scale", "devchurn": "device_churn",
     "eventlog": "eventlog", "dtrace": "decision_trace",
-    "roofline": "roofline",
+    "obs": "obs_overhead", "roofline": "roofline",
 }
 
 
@@ -115,6 +119,8 @@ def main() -> None:
                 from . import eventlog as m
             elif section == "dtrace":
                 from . import decision_trace as m
+            elif section == "obs":
+                from . import obs_overhead as m
             elif section == "roofline":
                 from . import roofline as m
             else:

@@ -11,17 +11,20 @@ overlaid on the tenant churn, joint batched assignment, and an autoscaler.
 the run is killed at processed event N, rebuilt from its durable log +
 newest snapshot, resumed, and compared against an uninterrupted run.
 ``--trace`` runs with the obs planes live (decision-path spans + metrics
-registry, DESIGN.md §13) and re-runs untraced to verify the observation-only
-guarantee: both trial sequences must be byte-identical.  ``--report-dir
-PATH`` renders the per-run experiment directory (``PATH/<run_id>/`` with
-summary.json, timeline.csv, self-contained report.html).
+registry + windowed export, DESIGN.md §13-§14), ``--health`` attaches the
+SLO burn-rate / watchdog monitor, and ``--forensics`` records per-decision
+attribution; any of them triggers a bare twin re-run to verify the
+observation-only guarantee: both trial sequences must be byte-identical.
+``--report-dir PATH`` renders the per-run experiment directory
+(``PATH/<run_id>/`` with summary.json, timeline.csv, self-contained
+report.html, plus alerts.jsonl / forensics.jsonl when those planes ran).
 Used by CI as a smoke test:
 
   PYTHONPATH=src python examples/streaming_service.py --events 50
   PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
   PYTHONPATH=src python examples/streaming_service.py --events 50 --crash-at 40
   PYTHONPATH=src python examples/streaming_service.py --events 60 --trace \\
-      --report-dir obs_report
+      --health --forensics --report-dir obs_report
 """
 
 from __future__ import annotations
@@ -100,11 +103,20 @@ def main() -> None:
                    help="run with decision-path tracing + metrics enabled, "
                         "then verify against an untraced twin run that "
                         "tracing changed no decision (DESIGN.md §13)")
+    p.add_argument("--health", action="store_true",
+                   help="attach the SLO burn-rate / watchdog monitor "
+                        "(repro.obs.HealthMonitor, DESIGN.md §14); alerts "
+                        "print at the end and land in the report")
+    p.add_argument("--forensics", action="store_true",
+                   help="record per-decision attribution (winner/runner-up "
+                        "EIrate, margin, uniform-cost counterfactual — "
+                        "DESIGN.md §14)")
     p.add_argument("--report-dir", default=None, metavar="PATH",
                    help="write the per-run experiment directory "
                         "(PATH/<run_id>/ with summary.json, timeline.csv, "
                         "report.html) — works with or without --trace")
     args = p.parse_args()
+    slo = {"device_utilization": 0.25, "ttfo_p99": 100.0}
 
     sessions = max(1, args.events // 2)
     if args.device_churn:
@@ -130,9 +142,16 @@ def main() -> None:
         if args.trace and "tracer" not in kw:
             # fresh obs planes per engine — spans/metrics never mix across
             # the reference, crashed, and recovered runs of the crash demo
-            from repro.obs import MetricsRegistry, Tracer
+            from repro.obs import MetricsExporter, MetricsRegistry, Tracer
             kw["tracer"] = Tracer(enabled=True)
             kw["metrics"] = MetricsRegistry()
+            kw["exporter"] = MetricsExporter(kw["metrics"], window=20.0)
+        if args.health and "health" not in kw:
+            from repro.obs import HealthMonitor
+            kw["health"] = HealthMonitor(slo=slo, window=20.0)
+        if args.forensics and "forensics" not in kw:
+            from repro.obs import ForensicsRecorder
+            kw["forensics"] = ForensicsRecorder()
         if args.device_churn:
             reg = two_class_registry(2.0, overhead=0.5, chips=32)
             half = max(1, args.slices // 2)
@@ -172,21 +191,43 @@ def main() -> None:
               f"window [{pd['joined']:.1f}, {left}]  "
               f"trials {pd['trials']:3d}  util {pd['utilization']:.3f}")
     if args.telemetry_json:
-        path = res.telemetry.to_json(args.telemetry_json,
-                                     metrics=eng.metrics)
+        path = res.telemetry.to_json(
+            args.telemetry_json, metrics=eng.metrics,
+            alerts=eng.health.alerts if args.health else None)
         print(f"telemetry -> {path}")
 
-    if args.trace:
-        # the observation-only guarantee (DESIGN.md §13): an untraced twin
-        # of the same run must make byte-identical decisions — spans wrap
-        # the engine's jit programs, they never change them
-        twin = make_engine(tracer=None, metrics=None).run(trace)
+    if args.health:
+        by_kind: dict[str, int] = {}
+        for a in eng.health.alerts:
+            by_kind[a.kind] = by_kind.get(a.kind, 0) + 1
+        print(f"\nhealth: {len(eng.health.alerts)} alerts "
+              f"{json.dumps(by_kind, sort_keys=True)}")
+        for a in eng.health.alerts[:5]:
+            print(f"  [{a.severity}] t={a.t:.1f} {a.kind} "
+                  f"subject={a.subject} {json.dumps(a.detail)}")
+
+    if args.forensics:
+        recs = eng.forensics.records
+        flips = sum(1 for r in recs
+                    if (r.get("uniform_cost") or {}).get("changes_pick"))
+        print(f"\nforensics: {len(recs)} decisions recorded, "
+              f"{flips} flip under uniform cost")
+        if recs:
+            print("  sample:", json.dumps(recs[0]))
+
+    if args.trace or args.health or args.forensics:
+        # the observation-only guarantee (DESIGN.md §13-§14): a bare twin
+        # of the same run must make byte-identical decisions — spans,
+        # exports, alerts, and forensics observe the engine's jit
+        # programs, they never change them
+        twin = make_engine(tracer=None, metrics=None, exporter=None,
+                           health=None, forensics=None).run(trace)
         same = ([dataclasses.astuple(t) for t in res.trials]
                 == [dataclasses.astuple(t) for t in twin.trials])
-        n_spans = len(eng.tracer.records())
-        print(f"\ntraced run: {n_spans} spans over {eng.event_index} events; "
-              f"untraced twin identical={same}")
-        assert same, "tracing changed the decision sequence"
+        n_spans = len(eng.tracer.records()) if args.trace else 0
+        print(f"\nobs-enabled run: {n_spans} spans over {eng.event_index} "
+              f"events; bare twin identical={same}")
+        assert same, "an observability plane changed the decision sequence"
 
     if args.report_dir:
         from repro.obs import write_report
@@ -196,10 +237,12 @@ def main() -> None:
             tracer=eng.tracer if args.trace else None,
             metrics=eng.metrics,
             result=res,
+            alerts=eng.health.alerts if args.health else None,
+            forensics=eng.forensics.records if args.forensics else None,
             meta={"policy": args.policy, "slices": args.slices,
                   "seed": args.seed, "events": trace.num_events,
                   "traced": args.trace, "wall_s": round(wall, 3),
-                  "slo": {"device_utilization": 0.25, "ttfo_p99": 100.0}})
+                  "slo": slo})
         print(f"report -> {run_dir}")
 
     # smoke-test invariants: the run must have actually served tenants

@@ -54,6 +54,7 @@ import numpy as np
 from .ei import (
     choose_next_fused,
     choose_topk_classes,
+    eirate_topk_fused,
     single_tenant_ei_scores,
     topk_rows_padded,
 )
@@ -62,6 +63,10 @@ from .tenancy import Problem
 from repro.obs import NULL_TRACER
 
 SCORERS = ("fused", "ops", "sharded")
+
+#: candidates kept per forensics record on the fused/ops paths (the
+#: sharded path keeps its scorer's own top-k)
+FORENSICS_TOPK = 4
 
 _FLOOR_SDS = 5.0  # "no observation yet" sits this many prior sds below mu0
 
@@ -175,6 +180,7 @@ class ControlPlane:
         self.gp.ensure_capacity(cap_n)
         self.rr_pointer = 0
         self.tracer = NULL_TRACER
+        self._forensics = None
         self._rebuild_mirrors()
 
     @classmethod
@@ -226,6 +232,7 @@ class ControlPlane:
         cp.gp = make_gp(problem.K, problem.mu0, problem.membership, jitter)
         cp.rr_pointer = 0
         cp.tracer = NULL_TRACER
+        cp._forensics = None
         cp._rebuild_mirrors()
         return cp
 
@@ -540,6 +547,60 @@ class ControlPlane:
         if self._sharded is not None:
             self._sharded.tracer = tracer
 
+    def set_forensics(self, recorder) -> None:
+        """Install a ``repro.obs.ForensicsRecorder`` on the decision path.
+        Observation-only: when enabled, the sharded path keeps the top-k the
+        decision already materializes (``decide()`` is the head of
+        ``decide_topk()``) and the fused/ops paths run one *additional*
+        jitted top-k program — the decision itself is computed by the same
+        program either way."""
+        self._forensics = recorder
+
+    def _base_cost(self, g: int) -> float:
+        """Host-side cost of one candidate, valid across the sharded
+        scorer's padded capacity (padding cost is 1.0 by convention)."""
+        if self._sharded is not None and self._sharded._cost_host is not None:
+            ch = self._sharded._cost_host
+            if g < len(ch):
+                return float(ch[g])
+        return float(self.cost[g]) if g < len(self.cost) else 1.0
+
+    def _record_forensics(self, values, gids, mu, sd, *,
+                          speed: float = 1.0, overhead: float = 0.0,
+                          device_class: str | None = None) -> None:
+        """Feed one materialized top-k into the forensics recorder, with the
+        host-side μ/σ/cost decomposition aligned to the candidates."""
+        values = np.asarray(values)
+        gids = np.asarray(gids)
+        mu = np.asarray(mu)
+        sd = np.asarray(sd)
+        n = mu.shape[0]
+        eff, mu_k, sd_k = [], [], []
+        for gi in gids:
+            gi = int(gi)
+            eff.append(self._base_cost(gi) / speed + overhead)
+            mu_k.append(float(mu[gi]) if gi < n else 0.0)
+            sd_k.append(float(sd[gi]) if gi < n else 0.0)
+        self._forensics.on_decision(
+            scorer=self.scorer, values=values, gids=gids, eff_costs=eff,
+            mu=mu_k, sd=sd_k, speed=speed, device_class=device_class)
+
+    def _record_batch_forensics(self, v, g, mu, sd, rates, overheads,
+                                class_names) -> None:
+        """One forensics record per class row of a batched decision (the
+        (C, k) top-k the greedy assignment consumes)."""
+        if self._forensics is None:
+            return
+        rates = np.asarray(rates, dtype=np.float64)
+        overheads = np.asarray(overheads, dtype=np.float64)
+        for c in range(v.shape[0]):
+            name = (str(class_names[c]) if class_names is not None
+                    else f"class{c}")
+            self._record_forensics(v[c], g[c], mu, sd,
+                                   speed=float(rates[c]),
+                                   overhead=float(overheads[c]),
+                                   device_class=name)
+
     # ---- event steps -------------------------------------------------------
 
     def best_effective(self) -> np.ndarray:
@@ -555,15 +616,21 @@ class ControlPlane:
         self.selected[model] = False
         self._selected_j = self._selected_j.at[model].set(False)
 
-    def record_observation(self, model: int, z: float) -> None:
+    def record_observation(self, model: int, z: float) -> bool:
+        """Fold one observation; returns True when it improved at least one
+        member tenant's incumbent (the health plane's regret-stall signal —
+        callers that predate the health plane ignore the return)."""
         self.observed[model] = True
         with self.tracer.span("gp_fold", model=model):
             self.gp.observe(model, z)
         users = np.nonzero(self.membership[:, model])[0]
+        improved = False
         for u in users:
             if z > self.best[u] or not np.isfinite(self.best[u]):
                 self.best[u] = max(z, self.best[u]) if np.isfinite(self.best[u]) else z
                 self._best_j = self._best_j.at[u].set(self.best[u])
+                improved = True
+        return improved
 
     # ---- policy decisions --------------------------------------------------
 
@@ -582,8 +649,17 @@ class ControlPlane:
                 else:
                     mu, sd = tr.sync(self.gp.posterior_sd())
             with tr.span("score", scorer="sharded"):
-                idx, score = self._sharded.decide(
-                    mu, sd, self._best_j, self.selected, device_speed)
+                if self._forensics is None:
+                    idx, score = self._sharded.decide(
+                        mu, sd, self._best_j, self.selected, device_speed)
+                else:
+                    # decide() is literally the head of decide_topk(), so
+                    # keeping the k candidates changes no decision — it
+                    # just stops discarding what the program materialized
+                    v, g = self._sharded.decide_topk(
+                        mu, sd, self._best_j, self.selected, device_speed)
+                    idx, score = int(g[0]), float(v[0])
+                    self._record_forensics(v, g, mu, sd, speed=device_speed)
             if not np.isfinite(score) or score <= -1e29:
                 return None
             return idx, -1
@@ -604,12 +680,20 @@ class ControlPlane:
                     mu, sd, self._best_j, self._membership_j, cost,
                     self._selected_j)
                 idx, score = int(idx), float(score)
+        if self._forensics is not None:
+            # one additional jitted top-k over the same masked EIrate
+            # vector; its head equals the decision's argmax (keep-earlier
+            # tie-break), the decision above is untouched
+            v, g = eirate_topk_fused(
+                mu, sd, self._best_j, self._membership_j, cost,
+                self._selected_j, k=FORENSICS_TOPK)
+            self._record_forensics(v, g, mu, sd, speed=device_speed)
         if not np.isfinite(score) or score <= -1e29:
             return None
         return idx, -1
 
-    def choose_mdmt_batch(self, rates, overheads,
-                          k: int) -> tuple[np.ndarray, np.ndarray]:
+    def choose_mdmt_batch(self, rates, overheads, k: int, *,
+                          class_names=None) -> tuple[np.ndarray, np.ndarray]:
         """One scoring pass for a k-device joint assignment (DESIGN.md §11).
 
         ``rates``/``overheads`` carry one entry per *device class* present
@@ -620,6 +704,9 @@ class ControlPlane:
         single class at rate 1 / overhead 0, row 0's head is bit-identical
         to :meth:`choose_mdmt`'s pick (the ``/ 1.0`` and ``+ 0.0`` are IEEE
         identities), which is the batched == sequential contract.
+
+        ``class_names`` (optional, len C) labels the per-class forensics
+        records when a recorder is installed; it never affects scoring.
         """
         rates_j = jnp.asarray(np.asarray(rates, np.float32))
         over_j = jnp.asarray(np.asarray(overheads, np.float32))
@@ -640,7 +727,10 @@ class ControlPlane:
             with tr.span("score_topk", scorer="sharded", k=k):
                 v, g = self._sharded.decide_topk_classes(
                     mu, sd, self._best_j, self.selected, rates_j, over_j, k=k)
-                return np.asarray(v), np.asarray(g)
+                v, g = np.asarray(v), np.asarray(g)
+                self._record_batch_forensics(v, g, mu, sd, rates, overheads,
+                                             class_names)
+                return v, g
         with tr.span("posterior", scorer=self.scorer):
             mu, sd = tr.sync(self.gp.posterior_sd())
         cm = self._cost_j[None, :] / rates_j[:, None] + over_j[:, None]
@@ -656,7 +746,10 @@ class ControlPlane:
                 v, i = choose_topk_classes(
                     mu, sd, self._best_j, self._membership_j, cm,
                     self._selected_j, k=k)
-            return np.asarray(v), np.asarray(i)
+            v, i = np.asarray(v), np.asarray(i)
+            self._record_batch_forensics(v, i, mu, sd, rates, overheads,
+                                         class_names)
+            return v, i
 
     def _users_with_work(self) -> np.ndarray:
         has_work = (self.membership & ~self.selected[None, :]).any(axis=1)

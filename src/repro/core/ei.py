@@ -182,6 +182,29 @@ def choose_topk_classes(
     return topk_rows_padded(scores, k)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def eirate_topk_fused(
+    mu: jax.Array,
+    sigma: jax.Array,
+    best_per_user: jax.Array,
+    membership: jax.Array,
+    cost: jax.Array,
+    selected: jax.Array,
+    *,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Forensics companion to :func:`choose_next_fused`: the same masked
+    EIrate vector reduced to its top-k ``(values, ids)``.  Run *in
+    addition to* the decision program, only when forensics is enabled —
+    the decision path itself is untouched.  ``lax.top_k`` keeps the
+    earlier element on ties, so ``ids[0]`` always equals
+    ``choose_next_fused``'s argmax."""
+    total = ei_total(mu, sigma, best_per_user, membership)
+    scores = jnp.where(selected, NEG_INF, total / cost)
+    kk = min(k, scores.shape[0])
+    return jax.lax.top_k(scores, kk)
+
+
 @jax.jit
 def single_tenant_ei_scores(
     mu: jax.Array,

@@ -89,6 +89,12 @@ def _append_step(
     diag_acc: (n,) running sum of W^2 over observed rows (= prior_var - post_var).
     K_row:    (n,) row of the prior kernel for the new model.
     idx:      scalar int, index of the new model.
+
+    Also returns the pivot ``d2`` (the Schur complement of the new row):
+    when it sits at the jitter floor the factorization is numerically
+    degenerate — the health plane's conditioning watchdog consumes it
+    (DESIGN.md §14).  The extra output changes no numerics: W/alpha/
+    diag_acc are computed exactly as before.
     """
     # l = L^{-1} K[obs, new] is exactly column `idx` of W (rows >= k are zero).
     l = W[:, idx]
@@ -99,7 +105,7 @@ def _append_step(
     W = jax.lax.dynamic_update_index_in_dim(W, w_new, k, axis=0)
     alpha = alpha.at[k].set(a_new)
     diag_acc = diag_acc + w_new * w_new
-    return W, alpha, diag_acc
+    return W, alpha, diag_acc, d2
 
 
 @jax.jit
@@ -132,12 +138,15 @@ class IncrementalGP:
         self._kdiag = None
         self.observed: list[int] = []
         self._z = {}
+        # pivot d² of the most recent fold, device-resident (never synced
+        # unless a health monitor asks — the disabled path stays async)
+        self.last_d2 = None
 
     def observe(self, idx: int, z_val: float) -> None:
         """Condition on z(model idx) = z_val.  O(n^2) fixed-shape jitted step."""
         if idx in self._z:
             raise ValueError(f"model {idx} already observed")
-        self._W, self._alpha, self._diag_acc = _append_step(
+        self._W, self._alpha, self._diag_acc, self.last_d2 = _append_step(
             self._W,
             self._alpha,
             self._diag_acc,
@@ -201,6 +210,7 @@ class BlockIncrementalGP:
         self._dirty: set[int] = set()
         self.observed: list[int] = []
         self._z = {}
+        self.last_d2 = None     # pivot d² of the most recent fold
         if K is not None:
             K = np.asarray(K)
             mu0 = np.asarray(mu0, dtype=K.dtype)
@@ -315,6 +325,7 @@ class BlockIncrementalGP:
             raise KeyError(f"model {idx} belongs to no live block")
         bi, li = self._local[idx]
         self._engines[bi].observe(li, z_val)
+        self.last_d2 = self._engines[bi].last_d2
         self._dirty.add(bi)
         self.observed.append(idx)
         self._z[idx] = float(z_val)

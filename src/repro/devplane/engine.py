@@ -209,7 +209,7 @@ class DevPlaneEngine(StreamEngine):
     def _post_event(self, kind: str) -> None:
         if self.autoscale is None or not self.autoscale.ready(self._t):
             return                     # skip the O(capacity) backlog scan
-        backlog = int(np.count_nonzero(~self.cp.selected & self.cp.model_live))
+        backlog = self._backlog()
         action = self.autoscale.decide(
             self._t, backlog=backlog, num_devices=self.fleet.num_devices,
             num_free=len(self._free))
@@ -271,7 +271,8 @@ class DevPlaneEngine(StreamEngine):
             with self.tracer.span("decide", batch=len(devices),
                                   classes=len(cls_names)):
                 vals, gids = self.cp.choose_mdmt_batch(
-                    rates, overheads, k=len(devices))
+                    rates, overheads, k=len(devices),
+                    class_names=cls_names)
             dt = _time.perf_counter() - t0
             self._decision_seconds += dt
             self._decisions += 1

@@ -24,7 +24,24 @@ this package gives the control plane three observation planes (DESIGN.md
               (``reports/<run_id>/`` with ``summary.json``,
               ``timeline.csv``, a self-contained ``report.html`` and the
               raw ``trace.json``), rendered from telemetry + trace + metrics
-              payloads.  The multi-tenant operator view.
+              payloads plus the live planes' alerts and forensics records.
+              The multi-tenant operator view.
+
+The *active* layer on top (DESIGN.md §14) turns the flight recorder into a
+monitoring system:
+
+  export.py     :class:`MetricsExporter` — sim-time-windowed registry
+                snapshots streamed to append-only JSONL from inside the
+                engine pop loops, plus a Prometheus text rendering.
+  health.py     :class:`HealthMonitor` — SLO burn-rate alerts against the
+                run's ``meta["slo"]`` targets and rule-based watchdogs
+                (regret-stall, queue runaway, device-class starvation, GP
+                conditioning), emitting structured :class:`Alert` records
+                into telemetry and the durable event log.
+  forensics.py  :class:`ForensicsRecorder` — per-decision attribution
+                (winner/runner-up EIrate, μ/σ/cost decomposition, argmax
+                margin, uniform-cost counterfactual) from the top-k the
+                scoring program already materializes.
 
 Everything here is observation-only: a traced run's trial sequence is
 byte-identical to an untraced run's (CI asserts it), spans/metrics never
@@ -33,6 +50,9 @@ indices so a crash-recovered run re-emits the identical span tree for the
 replayed suffix (tests/test_obs.py).
 """
 
+from .export import MetricsExporter, prometheus_text  # noqa: F401
+from .forensics import ForensicsRecorder  # noqa: F401
+from .health import ALERT_KINDS, Alert, HealthMonitor  # noqa: F401
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
 from .report import aggregate_spans, write_report  # noqa: F401
 from .trace import NULL_TRACER, Tracer  # noqa: F401

@@ -18,7 +18,19 @@ from 1µs to 100s — trial durations and decision latencies both fit).
 ``percentile(q)`` interpolates linearly inside the located bucket and
 clamps to the observed min/max, so p50/p99 are bucket-resolution estimates,
 not exact order statistics — the right trade for an always-on hot-path
-counter.
+counter.  Observations above the last finite bound land in an explicit
+``+inf`` overflow bucket; percentiles falling there interpolate between the
+top bound and the observed max, and ``summary()`` reports ``saturated``
+so readers know the tail estimate is max-clamped rather than
+bucket-resolved.
+
+Counters and gauges accept optional ``labels`` (per-device-class,
+per-priority, ...): each label set is its own time series, snapshot under
+the Prometheus-style flat key ``name{k="v",...}`` (label items sorted, so
+keys are deterministic).  Unlabeled metrics keep their bare names —
+``snapshot()``'s schema is backward compatible.  ``series(name)`` returns
+the (labels, metric) pairs of a labeled family so export and health rules
+never parse mangled metric keys.
 """
 
 from __future__ import annotations
@@ -65,8 +77,12 @@ class Histogram:
     """Fixed-bucket histogram with p50/p99 snapshot estimates.
 
     ``bounds`` are ascending finite upper bounds; values above the last
-    bound land in an implicit overflow bucket.  Non-finite observations are
-    counted separately (``dropped``) instead of poisoning the stats.
+    bound land in the explicit ``+inf`` overflow bucket
+    (``counts[len(bounds)]``) — never silently attributed to the last
+    finite bucket.  ``saturated`` is True once that bucket is non-empty:
+    percentile estimates that land there are max-clamped interpolations,
+    not bucket-resolved.  Non-finite observations are counted separately
+    (``dropped``) instead of poisoning the stats.
     """
 
     __slots__ = ("bounds", "counts", "count", "total", "min", "max",
@@ -76,7 +92,7 @@ class Histogram:
         if list(bounds) != sorted(bounds) or len(bounds) == 0:
             raise ValueError("bounds must be non-empty and ascending")
         self.bounds = tuple(float(b) for b in bounds)
-        self.counts = [0] * (len(self.bounds) + 1)   # + overflow
+        self.counts = [0] * (len(self.bounds) + 1)   # + explicit +inf bucket
         self.count = 0
         self.total = 0.0
         self.min = None
@@ -121,6 +137,12 @@ class Histogram:
             cum += c
         return float(self.max)   # pragma: no cover - cum==count handled above
 
+    @property
+    def saturated(self) -> bool:
+        """True once any observation exceeded the top finite bound (mass
+        sits in the ``+inf`` bucket; tail percentiles are max-clamped)."""
+        return self.counts[len(self.bounds)] > 0
+
     def summary(self) -> dict:
         mean = self.total / self.count if self.count else None
         return {
@@ -132,32 +154,53 @@ class Histogram:
             "p50": self.percentile(50),
             "p99": self.percentile(99),
             "dropped_non_finite": self.dropped,
+            "saturated": self.saturated,
         }
+
+
+def _labeled_key(name: str, labels: dict | None) -> str:
+    """Prometheus-style flat series key: ``name{k="v",...}`` with label
+    items sorted so the key is deterministic; bare ``name`` when
+    unlabeled."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
 
 
 class MetricsRegistry:
     """Named metric store with get-or-create accessors.  Asking for an
-    existing name with the same kind returns the same object (engines cache
-    handles at construction; ad-hoc callers just look up by name)."""
+    existing name with the same kind (and labels) returns the same object
+    (engines cache handles at construction; ad-hoc callers just look up by
+    name).  Labeled series share one *family* name — the whole family must
+    be one kind."""
 
     def __init__(self):
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
+        self._kinds: dict[str, dict] = {}     # family name -> owning store
+        self._labels: dict[str, dict] = {}    # series key -> labels dict
 
     def _check_free(self, name: str, own: dict) -> None:
-        for kind in (self._counters, self._gauges, self._histograms):
-            if kind is not own and name in kind:
-                raise ValueError(f"metric {name!r} already registered "
-                                 "with a different kind")
+        store = self._kinds.setdefault(name, own)
+        if store is not own:
+            raise ValueError(f"metric {name!r} already registered "
+                             "with a different kind")
 
-    def counter(self, name: str) -> Counter:
+    def counter(self, name: str, labels: dict | None = None) -> Counter:
         self._check_free(name, self._counters)
-        return self._counters.setdefault(name, Counter())
+        key = _labeled_key(name, labels)
+        if labels:
+            self._labels[key] = dict(labels)
+        return self._counters.setdefault(key, Counter())
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, labels: dict | None = None) -> Gauge:
         self._check_free(name, self._gauges)
-        return self._gauges.setdefault(name, Gauge())
+        key = _labeled_key(name, labels)
+        if labels:
+            self._labels[key] = dict(labels)
+        return self._gauges.setdefault(key, Gauge())
 
     def histogram(self, name: str,
                   bounds: tuple[float, ...] | None = None) -> Histogram:
@@ -167,6 +210,19 @@ class MetricsRegistry:
             h = Histogram(bounds or DEFAULT_TIME_BUCKETS)
             self._histograms[name] = h
         return h
+
+    def series(self, name: str) -> list:
+        """All series of the family ``name`` as ``(labels, metric)`` pairs
+        (labels ``{}`` for the unlabeled series) — the structured view
+        export and health rules use instead of parsing flat keys."""
+        store = self._kinds.get(name)
+        if store is None:
+            return []
+        out = []
+        for key, m in store.items():
+            if key == name or key.startswith(name + "{"):
+                out.append((self._labels.get(key, {}), m))
+        return out
 
     def snapshot(self) -> dict:
         """JSON-able dump of every metric — the payload that rides in the

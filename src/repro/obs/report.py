@@ -12,6 +12,10 @@ sink, the tracer's span records, the metrics registry, optionally the
                  breakdown bars, SLO / regret / utilization tables —
                  zero external assets, opens from a CI artifact
   trace.json     raw span dump (only when a tracer with spans is given)
+  alerts.jsonl   health-plane alert records (only when alerts are given)
+  forensics.jsonl per-decision attribution stream (only when given); the
+                 html tabulates the smallest-margin decisions and counts
+                 uniform-cost counterfactual flips
 
 Everything is stdlib-rendered (json/csv/html): the report plane must run
 in the same zero-dependency envelope as the engines it observes.  The
@@ -159,6 +163,56 @@ def _span_section(span_agg: dict[str, dict]) -> str:
          ""], rows, left={0, 6})
 
 
+def _alerts_section(alerts: list[dict]) -> str:
+    if not alerts:
+        return ("<p class='muted'>No alerts fired — run with a "
+                "<code>HealthMonitor</code> attached for SLO burn-rate "
+                "and watchdog coverage.</p>")
+    rows = []
+    for a in alerts:
+        detail = ", ".join(f"{k}={_fmt(v)}"
+                           for k, v in sorted(a.get("detail", {}).items()))
+        rows.append([_fmt(a["t"], 2), a["event_index"],
+                     html.escape(a["kind"]), html.escape(a["severity"]),
+                     html.escape(str(a["subject"])), html.escape(detail)])
+    return _table(["t", "event", "kind", "severity", "subject", "detail"],
+                  rows, left={2, 3, 4, 5})
+
+
+def _forensics_section(records: list[dict], limit: int = 30) -> str:
+    if not records:
+        return ("<p class='muted'>No forensics recorded — run with a "
+                "<code>ForensicsRecorder</code> attached for per-decision "
+                "attribution.</p>")
+    cf_flips = sum(1 for r in records
+                   if (r.get("uniform_cost") or {}).get("changes_pick"))
+    # smallest-margin decisions are the interesting ones: the pick was
+    # nearly something else
+    ranked = sorted((r for r in records if r.get("margin") is not None),
+                    key=lambda r: r["margin"])[:limit]
+    rows = []
+    for r in ranked:
+        w, ru = r["winner"], r["runner_up"]
+        cf = r.get("uniform_cost") or {}
+        rows.append([
+            _fmt(r["t"], 2), r["event_index"], r["seq"],
+            html.escape(str(r.get("device_class") or "–")),
+            w["model"], _fmt(w["eirate"], 5), _fmt(w["ei"], 5),
+            _fmt(w["cost"], 3),
+            ru["model"] if ru else "–",
+            _fmt(r["margin"], 6),
+            ("flips&rarr;" + str(cf.get("model"))
+             if cf.get("changes_pick") else "no"),
+        ])
+    head = (f"<p class='muted'>{len(records)} decisions recorded; "
+            f"{cf_flips} would flip under uniform cost "
+            f"(cheapness-driven picks); showing the {len(rows)} "
+            f"smallest-margin decisions.</p>")
+    return head + _table(
+        ["t", "event", "seq", "class", "winner", "EIrate", "EI", "cost",
+         "runner-up", "margin", "uniform-cost"], rows, left={3, 10})
+
+
 def _slo_section(summary: dict, slo: dict) -> str:
     rows = []
     for key in ("ttfo_p50", "ttfo_p99", "serve_gap_p50", "serve_gap_max",
@@ -181,7 +235,9 @@ def _slo_section(summary: dict, slo: dict) -> str:
 
 def _render_html(run_id: str, meta: dict, summary: dict,
                  span_agg: dict[str, dict], metrics: dict | None,
-                 per_tenant: dict | None, per_device: dict | None) -> str:
+                 per_tenant: dict | None, per_device: dict | None,
+                 alerts: list[dict] | None = None,
+                 forensics: list[dict] | None = None) -> str:
     parts = [f"<!doctype html><html><head><meta charset='utf-8'>"
              f"<title>run {html.escape(run_id)}</title>"
              f"<style>{_CSS}</style></head><body>"]
@@ -196,6 +252,12 @@ def _render_html(run_id: str, meta: dict, summary: dict,
 
     parts.append("<h2>SLO attainment</h2>")
     parts.append(_slo_section(summary, dict(meta.get("slo") or {})))
+
+    parts.append("<h2>Health alerts</h2>")
+    parts.append(_alerts_section(list(alerts or [])))
+
+    parts.append("<h2>Decision forensics</h2>")
+    parts.append(_forensics_section(list(forensics or [])))
 
     parts.append("<h2>Service summary</h2>")
     parts.append(_table(
@@ -249,7 +311,8 @@ def _render_html(run_id: str, meta: dict, summary: dict,
 
 def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
                  tracer=None, metrics=None, result=None,
-                 meta: dict | None = None) -> Path:
+                 meta: dict | None = None, alerts=None,
+                 forensics=None) -> Path:
     """Render one per-run experiment directory and return its path.
 
     Args:
@@ -263,8 +326,19 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
       meta:      run metadata echoed into summary.json and the report
                  header.  ``meta["slo"]`` (metric name -> target) drives
                  the SLO-attainment column.
+      alerts:    health-plane alert records (``Alert`` objects or their
+                 ``to_record()`` dicts — e.g. ``HealthMonitor.alerts`` or
+                 ``EventLog.alerts``); rendered as the alert table and
+                 re-emitted to ``alerts.jsonl`` in the run dir.
+      forensics: per-decision attribution records
+                 (``ForensicsRecorder.records``); the smallest-margin
+                 decisions are tabulated and the raw stream lands in
+                 ``forensics.jsonl``.
     """
     meta = dict(meta or {})
+    alert_recs = [a.to_record() if hasattr(a, "to_record") else a
+                  for a in (alerts or [])]
+    forensic_recs = list(forensics or [])
     run_dir = Path(out_dir) / run_id
     run_dir.mkdir(parents=True, exist_ok=True)
 
@@ -276,6 +350,8 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
     span_agg = aggregate_spans(records)
     metric_snap = metrics.snapshot() if metrics is not None else None
 
+    cf_flips = sum(1 for r in forensic_recs
+                   if (r.get("uniform_cost") or {}).get("changes_pick"))
     payload = {
         "schema_version": REPORT_SCHEMA_VERSION,
         "run_id": run_id,
@@ -284,6 +360,15 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
         "metrics": metric_snap,
         "spans": span_agg,
         "num_spans": len(records),
+        "alerts": {
+            "total": len(alert_recs),
+            "by_kind": {k: sum(1 for a in alert_recs if a["kind"] == k)
+                        for k in sorted({a["kind"] for a in alert_recs})},
+        },
+        "forensics": {
+            "decisions": len(forensic_recs),
+            "uniform_cost_flips": cf_flips,
+        },
     }
     (run_dir / "summary.json").write_text(
         json.dumps(payload, indent=2, sort_keys=True, allow_nan=False))
@@ -295,7 +380,16 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
 
     (run_dir / "report.html").write_text(_render_html(
         run_id, meta, summary, span_agg, metric_snap, per_tenant,
-        per_device))
+        per_device, alerts=alert_recs, forensics=forensic_recs))
+
+    if alert_recs:
+        with open(run_dir / "alerts.jsonl", "w") as f:
+            for a in alert_recs:
+                f.write(json.dumps(a, allow_nan=False) + "\n")
+    if forensic_recs:
+        with open(run_dir / "forensics.jsonl", "w") as f:
+            for r in forensic_recs:
+                f.write(json.dumps(r, allow_nan=False) + "\n")
 
     if records:
         tracer.to_json(run_dir / "trace.json")

@@ -298,6 +298,8 @@ class ShardedScorer:
         self.tracer = NULL_TRACER   # installed by ControlPlane.set_tracer
         self._member = None     # (N_cap, cap) device-resident, P(None, shard)
         self._cost = None       # (cap,) device-resident, P(shard)
+        self._cost_host = None  # (cap,) host twin: forensics recovers
+        #                         EI = score x cost without a device sync
         self._cap = 0
 
     # ---- sharded mirrors ---------------------------------------------------
@@ -319,6 +321,7 @@ class ShardedScorer:
             mem, NamedSharding(self.mesh, P_MEMBER))
         self._cost = jax.device_put(
             c, NamedSharding(self.mesh, P_MODELS))
+        self._cost_host = c
         self._cap = cap
 
     def _pad(self, x, fill, dtype):

@@ -134,6 +134,9 @@ class StreamEngine:
         fault: FaultInjector | None = None,
         tracer=None,
         metrics=None,
+        exporter=None,
+        health=None,
+        forensics=None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
@@ -178,6 +181,16 @@ class StreamEngine:
                 "engine.compaction_pause_seconds")
             self._m_snapshot_s = metrics.histogram("engine.snapshot_seconds")
             self._m_queue = metrics.gauge("engine.queue_depth")
+        # live health plane (DESIGN.md §14): exporter/health/forensics are
+        # observation-only like the tracer — none of their outputs feed the
+        # decision path — but the exporter's window cursor and the health
+        # monitor's detector state ride in snapshot meta so a recovered
+        # run re-emits the identical export/alert suffix.  Alerts stream
+        # write-through to the log's durable alerts.jsonl per event.
+        self.exporter = exporter
+        self.health = health
+        self.forensics = forensics
+        self.cp.set_forensics(forensics)
 
         # mirrors scheduler.simulate's free-device stack: initial pop order is
         # slice M-1, M-2, ...; freed slices are re-pushed on top
@@ -326,7 +339,15 @@ class StreamEngine:
             self._trials[ti] = StreamTrial(
                 t.model, t.tenant_key, t.local_model, t.user_hint,
                 t.device, t.start, t.end, z)
-            self.cp.record_observation(model, z)
+            improved = self.cp.record_observation(model, z)
+            if self.health is not None:
+                # d2 stays device-resident until a monitor asks for it —
+                # the sync is paid only on the health-enabled path
+                d2 = self.cp.gp.last_d2
+                self.health.on_observation(
+                    self._t, self.event_index, tr.key, improved,
+                    d2=None if d2 is None else float(d2),
+                    jitter=self.cp._jitter, model=model)
             self.telemetry.on_observation(
                 self._t, tr.key, model, z, t.end - t.start, device=device)
         self.fleet.slices[device].current_trial = None
@@ -413,6 +434,11 @@ class StreamEngine:
             self._push(end, "finish", (d, model, ti))
         if self.metrics is not None:
             self._m_launches.inc()
+            self.metrics.counter("engine.launches_by_class",
+                                 labels={"cls": s.cls}).inc()
+        if self.health is not None:
+            self.health.on_launch(self._t, self.event_index, owner.key,
+                                  model, s.cls)
         self.telemetry.on_launch(self._t, owner.key, model, d, dur)
 
     def _duration_on(self, model: int, s) -> float:
@@ -486,6 +512,28 @@ class StreamEngine:
         """Hook between event handling and the launch pass — the devplane
         engine evaluates its autoscale policy here.  Base: no-op."""
 
+    # ---- live health plane (DESIGN.md §14) ---------------------------------
+
+    def _backlog(self) -> int:
+        """Launchable pool size: live models neither observed nor in
+        flight — the health plane's notion of pending work."""
+        return int(np.count_nonzero(~self.cp.selected & self.cp.model_live))
+
+    def _health_tick(self) -> None:
+        """Feed the watchdogs once per processed event (sim-time inputs
+        only — alert content must replay deterministically) and forward
+        new alerts to the durable event log."""
+        free_classes = tuple(sorted(
+            {self.fleet.slices[d].cls for d in self._free}))
+        self.health.on_event(
+            self._t, self.event_index,
+            queue_depth=len(self._admission_queue),
+            backlog=self._backlog(),
+            free_classes=free_classes,
+            summary_fn=lambda: self.telemetry.summary(now=self._t))
+        for a in self.health.drain_new():
+            self.log.append_alert(a.to_record())
+
     def begin(self, events, trace_name: str = "trace") -> None:
         """Ingest all external events (appending each to the log) and
         register the initial fleet — everything ``run`` does before the
@@ -522,6 +570,8 @@ class StreamEngine:
             # the log's trace field and a replayed suffix's span tree both
             # correlate for free
             self.tracer.begin_trace(self.event_index)
+            if self.forensics is not None:
+                self.forensics.begin_event(t, self.event_index)
             self._fault("before")
             with self.tracer.span("event", kind=kind):
                 if kind == "arrive":
@@ -550,6 +600,10 @@ class StreamEngine:
             if self.metrics is not None:
                 self._m_events.inc()
                 self._m_queue.set(len(self._admission_queue))
+            if self.health is not None:
+                self._health_tick()
+            if self.exporter is not None:
+                self.exporter.tick(self._t, self.event_index)
             self._fault("after")
             self._maybe_snapshot()
 
@@ -561,6 +615,12 @@ class StreamEngine:
             for d, row in self.telemetry.per_device().items():
                 self.metrics.gauge(f"device.{d}.busy_fraction").set(
                     row["utilization"])
+        if self.health is not None:
+            for a in self.health.drain_new():
+                self.log.append_alert(a.to_record())
+        if self.exporter is not None:
+            # after the end-of-run gauges so the closing record carries them
+            self.exporter.final(self._t, self.event_index)
         return StreamResult(
             trace_name=self._trace_name, policy=self.policy,
             num_devices=self.fleet.num_devices, trials=self._trials,
@@ -664,6 +724,18 @@ class StreamEngine:
             "telemetry": self.telemetry.state_dict(),
             "cp": cp_meta,
             "extra": self._snapshot_extra(),
+            # live-plane cursors (DESIGN.md §14): detector state and the
+            # export window cursor are pure functions of the event stream,
+            # so persisting them keeps a recovered run's alert/export
+            # suffix identical to the uninterrupted run.  Alert/forensics
+            # RECORDS never ride here — their durable prefix lives in the
+            # log's alerts.jsonl / the forensics JSONL stream.
+            "obs": {
+                "health": (self.health.state_dict()
+                           if self.health is not None else None),
+                "export": (self.exporter.state_dict()
+                           if self.exporter is not None else None),
+            },
         }
         return arrays, meta
 
@@ -734,3 +806,9 @@ class StreamEngine:
         self.telemetry.load_state(meta["telemetry"])
         self.cp.load_state(arrays, meta["cp"])
         self._restore_extra(meta["extra"])
+        # tolerant restore: snapshots from health-less runs lack the key
+        obs = meta.get("obs") or {}
+        if self.health is not None and obs.get("health") is not None:
+            self.health.load_state(obs["health"])
+        if self.exporter is not None and obs.get("export") is not None:
+            self.exporter.load_state(obs["export"])

@@ -219,7 +219,13 @@ class TelemetrySink:
 
     # ---- aggregation -------------------------------------------------------
 
-    def summary(self) -> dict:
+    def summary(self, now: float | None = None) -> dict:
+        """The roll-up.  ``now`` substitutes for ``end_time`` while a run
+        is still in progress (the health plane grades SLOs mid-run at
+        sim-time ``now``); the default — end-of-run shape — is untouched,
+        which the replay oracle's byte-identity leans on."""
+        end_time = self.end_time if now is None else max(float(now),
+                                                         self.end_time)
         served = [st for st in self.tenants.values() if st.first_obs is not None]
         ttfo = [st.first_obs - st.arrived for st in served]
         gaps = [g for st in self.tenants.values() for g in st.serve_gaps
@@ -234,11 +240,11 @@ class TelemetrySink:
         left_queued = [st for st in self.tenants.values()
                        if st.departed is not None and st.admitted is None]
         queue_max = max((d for _, d in self.queue_depth_samples), default=0)
-        elapsed = max(self.end_time, 1e-12)
+        elapsed = max(end_time, 1e-12)
         # device windows: joined -> left (or end of run).  With the initial
         # fleet registered at t=0 and no churn this denominator equals the
         # legacy num_slices * elapsed.
-        windows = {d: max((ds.left if ds.left is not None else self.end_time)
+        windows = {d: max((ds.left if ds.left is not None else end_time)
                           - ds.joined, 0.0)
                    for d, ds in self.devices.items()}
         wall = sum(windows.values())
@@ -262,7 +268,7 @@ class TelemetrySink:
             "trials_failed": self.num_failed_trials,
             "trials_preempted": self.num_preemptions,
             "observations_rejected_after_depart": self.num_rejected_observations,
-            "end_time": self.end_time,
+            "end_time": end_time,
             "device_utilization": utilization,
             "speed_weighted_utilization": speed_weighted,
             "devices_joined": sum(1 for ds in self.devices.values()
@@ -314,11 +320,16 @@ class TelemetrySink:
         return out
 
     def to_json(self, path: str | Path, include_tenants: bool = True,
-                metrics=None) -> Path:
+                metrics=None, alerts=None) -> Path:
         """Write the sink payload; ``metrics`` (a
         ``repro.obs.MetricsRegistry``) rides along under a ``"metrics"``
-        key in the same schema.  ``allow_nan=False`` is load-bearing: the
-        summary must contain explicit nulls, never NaN/±inf."""
+        key in the same schema, and ``alerts`` (a list of
+        ``repro.obs.Alert`` records, e.g. ``HealthMonitor.alerts`` or the
+        event log's durable ``alerts`` list) under ``"alerts"``.  Both are
+        ride-alongs: ``summary()``/``state_dict()`` stay untouched, so the
+        replay oracle's byte-identity never sees them.  ``allow_nan=False``
+        is load-bearing: the summary must contain explicit nulls, never
+        NaN/±inf."""
         payload = {"summary": self.summary()}
         if self.devices:
             payload["devices"] = {str(k): v
@@ -327,6 +338,9 @@ class TelemetrySink:
             payload["tenants"] = {str(k): v for k, v in self.per_tenant().items()}
         if metrics is not None:
             payload["metrics"] = metrics.snapshot()
+        if alerts is not None:
+            payload["alerts"] = [a.to_record() if hasattr(a, "to_record")
+                                 else a for a in alerts]
         path = Path(path)
         path.write_text(json.dumps(payload, indent=2, sort_keys=True,
                                    allow_nan=False))

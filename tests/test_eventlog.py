@@ -561,3 +561,94 @@ def test_pending_completion_for_departed_tenant_across_compaction(tmp_path):
                                     snapshot_every=4)
             assert_replay_matches(ref_eng, ref_res, *out[:3],
                                   context=f"pending_{point}_{idx}")
+
+
+# ---- live health plane under crash (DESIGN.md §14) ---------------------------
+
+def test_crash_recovery_reemits_alerts_forensics_and_export_windows(tmp_path):
+    """The §14 replay contract: alert content, forensics records, and
+    export-window timing are pure functions of the sim-time event stream,
+    so for any crash point
+
+        durable alert prefix (event_index <= snapshot step)
+          + resumed run's re-emitted alerts  ==  uninterrupted run's alerts
+
+    byte-for-byte, the resumed forensics records equal the uninterrupted
+    run's suffix exactly, and the resumed exporter emits the identical
+    (window, t, event_index) schedule for the suffix.  Detector state and
+    the export cursor ride in the engine snapshot; the durable prefix lives
+    in the crashed log's alerts.jsonl."""
+    from repro.obs import (ForensicsRecorder, HealthMonitor, MetricsExporter,
+                           MetricsRegistry)
+
+    trace = poisson_churn_trace(num_sessions=10, arrival_rate=1.2, seed=6,
+                                m_min=2, m_max=8, session_scale=12.0,
+                                num_failure_slices=1)
+
+    def factory(bag):
+        def make(**kw):
+            reg = MetricsRegistry()
+            planes = dict(
+                metrics=reg,
+                exporter=MetricsExporter(reg, window=5.0),
+                health=HealthMonitor(slo={"device_utilization": 1.5},
+                                     window=5.0, burn_windows=2,
+                                     stall_k=4, queue_limit=2),
+                forensics=ForensicsRecorder())
+            bag.append(planes)
+            return StreamEngine(Fleet.partition_pod(16 * 3, 3), "mdmt",
+                                seed=0, max_live_models=30, num_shards=2,
+                                **planes, **kw)
+        return make
+
+    ref_bag = []
+    ref_eng, ref_res = run_reference(factory(ref_bag), trace)
+    ref_alerts = [a.to_record() for a in ref_bag[0]["health"].alerts]
+    ref_forensics = ref_bag[0]["forensics"].records
+    assert len(ref_alerts) >= 2, "trace must fire alerts for the test to bite"
+    assert ref_forensics
+    assert ref_eng.log.alerts == ref_alerts   # engine streams them durably
+
+    def export_keys(records):
+        return [(r["window"], r["t"], r["event_index"],
+                 bool(r.get("final"))) for r in records]
+
+    ref_exports = export_keys(ref_bag[0]["exporter"].records)
+    n = ref_eng.event_index
+    mid_alert_ev = ref_alerts[len(ref_alerts) // 2]["event_index"]
+    for crash_at in sorted({2, mid_alert_ev + 1, n - 1}):
+        bag = []
+        make = factory(bag)
+        workdir = tmp_path / f"c{crash_at}"
+        logdir, snapdir = workdir / "log", workdir / "snap"
+        eng = make(log=EventLog(logdir), snapshot_root=str(snapdir),
+                   snapshot_every=5, fault=FaultInjector(crash_at, "before"))
+        with pytest.raises(SimulatedCrash):
+            eng.run(trace)
+        eng.log.close()
+
+        durable = EventLog.load(logdir)
+        eng2, resumed_from = recover(make, str(snapdir), durable)
+        res2 = eng2.resume()
+        prefix = [r for r in durable.processed if r[0] <= resumed_from]
+        assert_replay_matches(ref_eng, ref_res, eng2, res2, prefix,
+                              context=f"obs_planes_before_{crash_at}")
+
+        # alerts: durable prefix + re-emitted suffix == uninterrupted run
+        alert_prefix = [a for a in durable.alerts
+                        if a["event_index"] <= resumed_from]
+        alert_suffix = [a.to_record() for a in bag[-1]["health"].alerts]
+        assert alert_prefix + alert_suffix == ref_alerts
+        # the resumed engine's own durable stream holds exactly the suffix
+        assert eng2.log.alerts == alert_suffix
+
+        # forensics: the resumed run re-emits the suffix byte-identically
+        assert bag[-1]["forensics"].records == \
+            [r for r in ref_forensics if r["event_index"] > resumed_from]
+
+        # export windows: identical (window, t, event_index) schedule for
+        # the suffix (content carries wall-clock histograms — not compared)
+        assert export_keys(bag[-1]["exporter"].records) == \
+            [k for k in ref_exports if k[2] > resumed_from]
+    # the sweep must exercise both a non-empty prefix and non-empty suffix
+    assert mid_alert_ev + 1 > 2 and n - 1 > mid_alert_ev

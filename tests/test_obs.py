@@ -1,28 +1,37 @@
-"""Observability planes (DESIGN.md §13): tracer determinism, metrics
-registry, span aggregation, the report plane, and the two contracts that
-make tracing safe to leave wired into the engines —
+"""Observability planes (DESIGN.md §13-§14): tracer determinism, metrics
+registry (labels, histograms), streaming export, the health monitor's
+detectors, per-decision forensics, span aggregation, the report plane, and
+the two contracts that make every plane safe to leave wired into the
+engines —
 
-* **observation-only**: a traced run's decisions are byte-identical to an
-  untraced twin's (spans wrap the engine's jit programs, never change
-  them), and processed-log records only grow their trace-id field when
-  tracing is on;
-* **replay-stable**: trace ids are processed-event indices and span ids
-  count from 0 within each trace, so a crash-recovered run re-emits the
-  identical span tree for the replayed suffix with no tracer state in the
-  snapshot.
+* **observation-only**: an instrumented run's decisions are byte-identical
+  to a bare twin's (spans/exports/alerts/forensics observe the engine's
+  jit programs, never change them), and processed-log records only grow
+  their trace-id field when tracing is on;
+* **replay-stable**: trace ids are processed-event indices, span ids count
+  from 0 within each trace, export windows and alert content are pure
+  functions of the sim-time event stream, so a crash-recovered run
+  re-emits identical spans/windows/alerts for the replayed suffix
+  (the crash-side half lives in tests/test_eventlog.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import re
+import time
+from pathlib import Path
 
 import pytest
 
 from repro.core.fleet import Fleet
-from repro.obs import (NULL_TRACER, MetricsRegistry, Tracer,
-                       aggregate_spans, write_report)
+from repro.obs import (ALERT_KINDS, NULL_TRACER, ForensicsRecorder,
+                       HealthMonitor, MetricsExporter, MetricsRegistry,
+                       Tracer, aggregate_spans, prometheus_text,
+                       write_report)
 from repro.obs.metrics import Histogram
+from repro.obs.report import _slo_section
 from repro.obs.trace import ROOT_TRACE
 from repro.stream import (EventLog, FaultInjector, SimulatedCrash,
                           StreamEngine, poisson_churn_trace, recover)
@@ -152,6 +161,20 @@ def test_histogram_overflow_bucket_clamps_to_observed_max():
     h.observe(100.0)
     assert h.counts == [0, 1]
     assert h.percentile(50) == 100.0
+    assert h.saturated is True
+    assert h.summary()["saturated"] is True
+
+
+def test_histogram_saturated_flag_tracks_overflow_bucket_only():
+    h = Histogram(bounds=(1.0, 2.0))
+    h.observe(0.5)
+    h.observe(2.0)                  # at the top bound: still in-range
+    assert h.saturated is False
+    assert h.summary()["saturated"] is False
+    h.observe(2.1)
+    assert h.counts == [1, 1, 1]
+    assert h.saturated is True
+    assert h.summary()["saturated"] is True
 
 
 def test_histogram_bounds_validation():
@@ -168,6 +191,43 @@ def test_registry_kind_collision():
         reg.gauge("x")
     with pytest.raises(ValueError):
         reg.histogram("x")
+
+
+def test_labeled_counters_and_gauges():
+    reg = MetricsRegistry()
+    reg.counter("launches", labels={"cls": "fast"}).inc(2)
+    reg.counter("launches", labels={"cls": "slow"}).inc()
+    reg.counter("launches").inc(5)      # the bare series coexists
+    reg.gauge("depth", labels={"q": "admit"}).set(3.0)
+    snap = reg.snapshot()
+    assert snap["counters"]['launches{cls="fast"}'] == 2
+    assert snap["counters"]['launches{cls="slow"}'] == 1
+    assert snap["counters"]["launches"] == 5
+    assert snap["gauges"]['depth{q="admit"}'] == {"value": 3.0, "max": 3.0}
+    # get-or-create per label set: the hot-path per-call lookup is stable
+    assert (reg.counter("launches", labels={"cls": "fast"})
+            is reg.counter("launches", labels={"cls": "fast"}))
+    json.dumps(snap, allow_nan=False)
+
+
+def test_labeled_key_is_sorted_and_series_is_structured():
+    reg = MetricsRegistry()
+    c = reg.counter("m", labels={"b": "2", "a": "1"})
+    assert 'm{a="1",b="2"}' in reg.snapshot()["counters"]
+    assert reg.series("m") == [({"a": "1", "b": "2"}, c)]
+    assert reg.series("nope") == []
+    # a family prefix must not leak sibling families into series()
+    reg.counter("meters").inc()
+    assert reg.series("m") == [({"a": "1", "b": "2"}, c)]
+
+
+def test_labeled_family_kind_collision():
+    reg = MetricsRegistry()
+    reg.counter("fam", labels={"x": "1"})
+    with pytest.raises(ValueError):
+        reg.gauge("fam", labels={"x": "2"})
+    with pytest.raises(ValueError):
+        reg.gauge("fam")                # the bare name shares the family
 
 
 # ---- span aggregation -------------------------------------------------------
@@ -308,3 +368,409 @@ def test_write_report_minimal(tmp_path):
     assert payload["run_id"] == "empty" and payload["spans"] == {}
     assert (run_dir / "report.html").exists()
     assert not (run_dir / "trace.json").exists()
+
+
+def _attainment(html_text: str, key: str) -> str:
+    m = re.search(rf'<td class="l">{key}</td>'
+                  r'<td>[^<]*</td><td>[^<]*</td>'
+                  r'<td class="l">([^<]*)</td>', html_text)
+    assert m, f"no SLO row for {key}"
+    return m.group(1)
+
+
+def test_slo_section_floor_vs_ceiling_semantics():
+    summary = {"device_utilization": 0.8, "ttfo_p99": 50.0,
+               "tenant_regret_max": 0.5}
+    text = _slo_section(summary, {"device_utilization": 0.9,
+                                  "ttfo_p99": 100.0,
+                                  "tenant_regret_max": 0.1})
+    # utilization targets are floors: 0.8 < 0.9 misses
+    assert _attainment(text, "device_utilization") == "MISSED"
+    # latency targets are ceilings: 50 <= 100 meets
+    assert _attainment(text, "ttfo_p99") == "met"
+    # regret targets are ceilings too: 0.5 > 0.1 misses
+    assert _attainment(text, "tenant_regret_max") == "MISSED"
+    # boundary values meet on both sides of the semantics split
+    text = _slo_section({"device_utilization": 0.9, "ttfo_p99": 100.0},
+                        {"device_utilization": 0.9, "ttfo_p99": 100.0})
+    assert _attainment(text, "device_utilization") == "met"
+    assert _attainment(text, "ttfo_p99") == "met"
+
+
+def test_slo_section_missing_targets_and_values():
+    text = _slo_section({"ttfo_p50": None, "serve_gap_p50": 1.0},
+                        {"ttfo_p50": 5.0})
+    # target set but the run produced no data
+    assert _attainment(text, "ttfo_p50") == "no data"
+    # value present but no target: ungraded, not "met"
+    assert _attainment(text, "serve_gap_p50") == "–"
+    # absent from both: still a row, still ungraded
+    assert _attainment(text, "tenant_regret_mean") == "–"
+
+
+# ---- streaming export -------------------------------------------------------
+
+def test_exporter_windows_are_a_function_of_the_event_stream(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    path = tmp_path / "export.jsonl"
+    ex = MetricsExporter(reg, path=str(path), window=10.0)
+    ex.tick(0.0, 0)                 # window 0: emits
+    c.inc()
+    ex.tick(5.0, 1)                 # same window: silent
+    ex.tick(23.0, 2)                # window 2 (idle window 1 emits nothing)
+    ex.final(30.0, 3)
+    ex.close()
+    assert [(r["window"], r["event_index"]) for r in ex.records] == \
+           [(0, 0), (2, 2), (3, 3)]
+    assert ex.records[0]["metrics"]["counters"]["n"] == 0
+    assert ex.records[1]["metrics"]["counters"]["n"] == 1
+    assert ex.records[-1]["final"] is True
+    # the JSONL stream is the in-memory list, write-through
+    lines = [json.loads(s) for s in path.read_text().splitlines()]
+    assert lines == ex.records
+
+
+def test_exporter_cursor_state_roundtrip():
+    reg = MetricsRegistry()
+    ex = MetricsExporter(reg, window=10.0)
+    ex.tick(25.0, 4)
+    resumed = MetricsExporter(reg, window=10.0)
+    resumed.load_state(json.loads(json.dumps(ex.state_dict())))
+    resumed.tick(27.0, 5)           # same window as the pre-crash emit
+    assert resumed.records == []
+    resumed.tick(31.0, 6)
+    assert [r["window"] for r in resumed.records] == [3]
+
+
+def test_exporter_rejects_nonpositive_window():
+    with pytest.raises(ValueError):
+        MetricsExporter(MetricsRegistry(), window=0.0)
+
+
+def test_prometheus_text_rendering():
+    reg = MetricsRegistry()
+    reg.counter("engine.events").inc(3)
+    reg.counter("launches", labels={"cls": "fast"}).inc()
+    reg.gauge("depth").set(2.0)
+    h = reg.histogram("lat", bounds=(1.0, 2.0))
+    h.observe(0.5)
+    text = prometheus_text(reg.snapshot())
+    assert "# TYPE engine_events_total counter" in text
+    assert "engine_events_total 3" in text
+    assert 'launches_total{cls="fast"} 1' in text      # labels pass through
+    assert "# TYPE depth gauge" in text
+    assert "depth 2.0" in text and "depth_max 2.0" in text
+    assert "# TYPE lat summary" in text
+    assert 'lat{quantile="0.5"} 0.5' in text
+    assert "lat_sum 0.5" in text and "lat_count 1" in text
+    # empty histograms render NaN quantiles, not a crash
+    reg2 = MetricsRegistry()
+    reg2.histogram("empty")
+    assert 'empty{quantile="0.5"} NaN' in prometheus_text(reg2.snapshot())
+
+
+# ---- health monitor ---------------------------------------------------------
+
+def test_queue_runaway_fires_on_rise_and_rearms_on_drain():
+    hm = HealthMonitor(queue_limit=4)
+    for depth in (1, 2, 3):
+        hm.on_event(float(depth), depth, queue_depth=depth, backlog=0)
+    hm.on_event(4.0, 4, queue_depth=4, backlog=0)   # crosses while rising
+    assert [(a.kind, a.severity) for a in hm.alerts] == \
+           [("queue_runaway", "page")]
+    assert hm.alerts[0].detail == {"depth": 4, "limit": 4}
+    hm.on_event(5.0, 5, queue_depth=6, backlog=0)   # still high: no re-fire
+    assert len(hm.alerts) == 1
+    hm.on_event(6.0, 6, queue_depth=2, backlog=0)   # <= limit//2: re-arms
+    hm.on_event(7.0, 7, queue_depth=5, backlog=0)
+    assert [a.kind for a in hm.alerts] == ["queue_runaway"] * 2
+
+
+def test_regret_stall_counts_and_rearms_on_improvement():
+    hm = HealthMonitor(stall_k=3)
+    hm.on_observation(0.0, 0, 7, True)
+    for i in range(1, 4):
+        hm.on_observation(float(i), i, 7, False)
+    assert [a.kind for a in hm.alerts] == ["regret_stall"]
+    assert hm.alerts[0].subject == "7"
+    assert hm.alerts[0].detail["observations_since_improvement"] == 3
+    hm.on_observation(4.0, 4, 7, False)     # still stalled: deduped
+    assert len(hm.alerts) == 1
+    hm.on_observation(5.0, 5, 7, True)      # improvement re-arms
+    for i in range(6, 9):
+        hm.on_observation(float(i), i, 7, False)
+    assert [a.kind for a in hm.alerts] == ["regret_stall"] * 2
+    # an unrelated tenant keeps its own counter
+    hm.on_observation(9.0, 9, 8, False)
+    assert len(hm.alerts) == 2
+
+
+def test_gp_conditioning_threshold_and_per_window_dedupe():
+    hm = HealthMonitor(window=10.0, conditioning_scale=10.0)
+    hm.on_observation(1.0, 0, "t", True, d2=5e-6, jitter=1e-6)
+    hm.on_observation(2.0, 1, "t", True, d2=5e-6, jitter=1e-6)   # same window
+    hm.on_observation(12.0, 2, "t", True, d2=5e-6, jitter=1e-6)  # next window
+    hm.on_observation(13.0, 3, "t", True, d2=1e-3, jitter=1e-6)  # healthy
+    hm.on_observation(14.0, 4, "t", True)                         # no d2 fed
+    assert [a.kind for a in hm.alerts] == ["gp_conditioning"] * 2
+    assert hm.alerts[0].detail == {"model": -1, "d2": 5e-6, "jitter": 1e-6}
+    assert [a.event_index for a in hm.alerts] == [0, 2]
+
+
+def test_class_starvation_clock_only_runs_while_demand_present():
+    hm = HealthMonitor(starvation_window=10.0)
+    # idle WITHOUT demand: the clock keeps resetting, no alert ever
+    for t in range(0, 30, 5):
+        hm.on_event(float(t), t, queue_depth=0, backlog=0,
+                    free_classes=("base",))
+    assert hm.alerts == []
+    # demand appears at t=30; last demand-free tick was t=25
+    hm.on_event(30.0, 30, queue_depth=0, backlog=2, free_classes=("base",))
+    assert hm.alerts == []                  # only 5s on the demand clock
+    hm.on_event(35.0, 31, queue_depth=0, backlog=2, free_classes=("base",))
+    assert [a.kind for a in hm.alerts] == ["class_starvation"]
+    assert hm.alerts[0].subject == "base"
+    assert hm.alerts[0].detail == {"idle_for": 10.0, "backlog": 2}
+    # a launch on the class re-arms and restarts its clock
+    hm.on_launch(36.0, 32, 0, 1, "base")
+    hm.on_event(40.0, 33, queue_depth=0, backlog=2, free_classes=("base",))
+    assert len(hm.alerts) == 1
+    hm.on_event(47.0, 34, queue_depth=0, backlog=2, free_classes=("base",))
+    assert len(hm.alerts) == 2
+
+
+def test_slo_burn_rate_window_grading_and_rearm():
+    vals = iter([0.1, 0.1, 0.9, 0.1, 0.1])
+    summary_fn = lambda: {"device_utilization": next(vals)}  # noqa: E731
+    hm = HealthMonitor(slo={"device_utilization": 0.5}, window=10.0,
+                       burn_windows=2, burn_threshold=0.75)
+    hm.on_event(10.0, 1, queue_depth=0, backlog=0, summary_fn=summary_fn)
+    assert hm.alerts == []          # one window of history < burn_windows
+    hm.on_event(20.0, 2, queue_depth=0, backlog=0, summary_fn=summary_fn)
+    assert [(a.kind, a.severity) for a in hm.alerts] == [("slo_burn", "page")]
+    assert hm.alerts[0].detail == {"burn_rate": 1.0, "value": 0.1,
+                                   "target": 0.5}
+    hm.on_event(30.0, 3, queue_depth=0, backlog=0, summary_fn=summary_fn)
+    hm.on_event(40.0, 4, queue_depth=0, backlog=0, summary_fn=summary_fn)
+    assert len(hm.alerts) == 1      # compliant window re-armed; burn 0.5 < .75
+    hm.on_event(50.0, 5, queue_depth=0, backlog=0, summary_fn=summary_fn)
+    assert len(hm.alerts) == 2      # two failing windows again: page again
+    # mid-window events never grade (the iterator would raise StopIteration)
+    hm.on_event(51.0, 6, queue_depth=0, backlog=0, summary_fn=summary_fn)
+
+
+def test_slo_burn_uses_report_plane_floor_vs_ceiling_semantics():
+    mk = lambda: HealthMonitor(slo={"ttfo_p99": 100.0}, window=10.0,  # noqa: E731
+                               burn_windows=1, burn_threshold=0.5)
+    hm = mk()
+    hm.on_event(10.0, 1, queue_depth=0, backlog=0,
+                summary_fn=lambda: {"ttfo_p99": 250.0})
+    assert [a.kind for a in hm.alerts] == ["slo_burn"]      # ceiling exceeded
+    hm2 = mk()
+    hm2.on_event(10.0, 1, queue_depth=0, backlog=0,
+                 summary_fn=lambda: {"ttfo_p99": 50.0})
+    assert hm2.alerts == []                                  # under the ceiling
+
+
+def test_health_state_roundtrip_reemits_exactly_the_suffix():
+    def drive(hm, start):
+        for i in range(start, start + 6):
+            hm.on_observation(float(i), i, "t0", False)
+            hm.on_event(float(i), i, queue_depth=i, backlog=0)
+
+    cfg = dict(stall_k=9, queue_limit=8)
+    prefix_hm = HealthMonitor(**cfg)
+    drive(prefix_hm, 0)
+    state = json.loads(json.dumps(prefix_hm.state_dict()))  # snapshot-safe
+
+    full = HealthMonitor(**cfg)
+    drive(full, 0)
+    drive(full, 6)
+    resumed = HealthMonitor(**cfg)
+    resumed.load_state(state)
+    assert resumed.alerts == [] and resumed.drain_new() == []
+    drive(resumed, 6)
+    # the resumed monitor emits the full run's alerts minus the prefix
+    assert full.alerts[len(prefix_hm.alerts):] == resumed.alerts
+    assert {a.kind for a in resumed.alerts} == {"regret_stall",
+                                                "queue_runaway"}
+
+
+def test_alert_record_roundtrip_and_drain():
+    from repro.obs import Alert
+    hm = HealthMonitor(queue_limit=1)
+    hm.on_event(1.0, 1, queue_depth=1, backlog=0)
+    (a,) = hm.drain_new()
+    assert hm.drain_new() == []         # drained exactly once
+    rec = json.loads(json.dumps(a.to_record(), allow_nan=False))
+    assert Alert.from_record(rec) == a
+    assert rec["kind"] in ALERT_KINDS
+
+
+# ---- forensics --------------------------------------------------------------
+
+def test_forensics_uniform_cost_counterfactual_flip():
+    fr = ForensicsRecorder()
+    fr.begin_event(3.0, 17)
+    # model 11 wins on EIrate (0.5 vs 0.1) but model 4 has the larger EI
+    # (1.0 vs 0.5): the pick is cheapness-driven and the counterfactual
+    # flips it
+    rec = fr.on_decision(scorer="fused", values=[0.5, 0.1], gids=[11, 4],
+                         eff_costs=[1.0, 10.0], mu=[0.2, 0.4],
+                         sd=[0.1, 0.3])
+    assert (rec["t"], rec["event_index"], rec["seq"]) == (3.0, 17, 0)
+    assert rec["winner"]["model"] == 11 and rec["runner_up"]["model"] == 4
+    assert rec["winner"]["ei"] == pytest.approx(0.5)
+    assert rec["runner_up"]["ei"] == pytest.approx(1.0)
+    assert rec["winner"]["mu"] == 0.2 and rec["winner"]["sd"] == 0.1
+    assert rec["margin"] == pytest.approx(0.4)
+    assert rec["uniform_cost"] == {"model": 4, "changes_pick": True}
+    # seq separates same-event decisions; a lone candidate has no runner-up
+    rec2 = fr.on_decision(scorer="fused", values=[0.5], gids=[11],
+                          eff_costs=[1.0])
+    assert rec2["seq"] == 1 and rec2["runner_up"] is None
+    assert rec2["margin"] is None
+    assert rec2["uniform_cost"] == {"model": 11, "changes_pick": False}
+    json.dumps(fr.records, allow_nan=False)
+
+
+def test_forensics_truncates_padded_topk_tail(tmp_path):
+    path = tmp_path / "forensics.jsonl"
+    fr = ForensicsRecorder(path=str(path))
+    fr.begin_event(0.0, 0)
+    # -1e30 is the sharded scorer's masked-slot fill: the tail after it is
+    # padding, not candidates — even if finite values follow
+    rec = fr.on_decision(scorer="sharded", values=[1.0, -1e30, 0.5],
+                         gids=[1, 2, 3], eff_costs=[1.0, 1.0, 1.0])
+    assert [c["model"] for c in rec["topk"]] == [1]
+    assert rec["runner_up"] is None
+    fr.close()
+    assert [json.loads(s) for s in path.read_text().splitlines()] == [rec]
+
+
+# ---- engine integration: every plane at once --------------------------------
+
+def test_all_planes_enabled_run_matches_bare_twin():
+    trace = _trace()
+    reg = MetricsRegistry()
+    eng = _factory()(tracer=Tracer(enabled=True), metrics=reg,
+                     exporter=MetricsExporter(reg, window=5.0),
+                     health=HealthMonitor(slo={"device_utilization": 1.5},
+                                          window=5.0, burn_windows=2),
+                     forensics=ForensicsRecorder())
+    res = eng.run(trace)
+    ref = _factory()().run(trace)
+
+    # the observation-only guarantee with the full stack attached
+    assert ([dataclasses.astuple(t) for t in res.trials]
+            == [dataclasses.astuple(t) for t in ref.trials])
+    assert res.telemetry.summary() == ref.telemetry.summary()
+
+    # every plane actually observed the run
+    assert eng.exporter.records and eng.exporter.records[-1].get("final")
+    assert eng.forensics.records
+    assert all(r["winner"] is not None for r in eng.forensics.records)
+    assert all(r["scorer"] for r in eng.forensics.records)
+    # a >1.0 utilization floor is unreachable: the burn detector must page
+    assert any(a.kind == "slo_burn" and a.severity == "page"
+               for a in eng.health.alerts)
+    # the engine forwarded every alert to the durable log, in order
+    assert eng.log.alerts == [a.to_record() for a in eng.health.alerts]
+    # labeled per-class launch counters (S1) fed from the launch path
+    fam = reg.series("engine.launches_by_class")
+    assert fam and all(set(labels) == {"cls"} for labels, _ in fam)
+    assert sum(c.value for _, c in fam) == len(res.trials)
+
+
+def test_devplane_batched_forensics_carries_class_and_seq():
+    from repro.devplane import DevPlaneEngine, two_class_registry
+    from repro.stream import device_churn_trace
+
+    trace = device_churn_trace(
+        num_sessions=8, arrival_rate=1.5, seed=2, initial_slices=4,
+        join_classes=(("fast", 16, 2.0), ("slow", 16, 1.0)),
+        join_rate=0.05, leave_rate=0.02, preempt_rate=0.03,
+        m_min=2, m_max=6, session_scale=10.0)
+
+    def make(**kw):
+        reg = two_class_registry(2.0, overhead=0.5, chips=16)
+        fleet = reg.build_fleet([("slow", 2), ("fast", 2)])
+        return DevPlaneEngine(fleet, "mdmt", seed=0, registry=reg,
+                              assign="batched", launch_order="fastest",
+                              max_live_models=30, **kw)
+
+    fr = ForensicsRecorder()
+    res = make(forensics=fr).run(trace)
+    ref = make().run(trace)
+    assert ([dataclasses.astuple(t) for t in res.trials]
+            == [dataclasses.astuple(t) for t in ref.trials])
+    assert fr.records
+    # batched per-class decisions stamp the class name
+    classes = {r["device_class"] for r in fr.records}
+    assert {"slow", "fast"} <= classes
+    assert all(r["winner"]["cost"] > 0 for r in fr.records)
+
+
+def test_batched_decision_records_one_forensics_row_per_class():
+    import numpy as np
+    from repro.core.control_plane import ControlPlane
+
+    cp = ControlPlane(np.random.default_rng(0))
+    m = 4
+    cp.add_tenant(0.04 * np.eye(m), np.zeros(m), np.ones(m))
+    fr = ForensicsRecorder()
+    cp.set_forensics(fr)
+    fr.begin_event(1.0, 5)
+    v, g = cp.choose_mdmt_batch([4.0, 1.0], [0.25, 0.0], k=2,
+                                class_names=["fast", "slow"])
+    # one record per class row of the SAME event: seq separates them
+    assert [(r["seq"], r["device_class"]) for r in fr.records] == \
+           [(0, "fast"), (1, "slow")]
+    assert all(r["event_index"] == 5 and r["t"] == 1.0 for r in fr.records)
+    # effective costs are the class's affine row: cost/rate + overhead
+    assert fr.records[0]["winner"]["cost"] == pytest.approx(1 / 4 + 0.25)
+    assert fr.records[1]["winner"]["cost"] == pytest.approx(1.0)
+    # and the recorded scores are the rows the assignment solver consumed
+    assert fr.records[0]["winner"]["eirate"] == pytest.approx(float(v[0][0]))
+    assert fr.records[1]["winner"]["eirate"] == pytest.approx(float(v[1][0]))
+
+
+# ---- S2: the disabled stack must stay under 1% of a decision ----------------
+
+def test_disabled_obs_stack_overhead_under_one_percent():
+    bench = Path(__file__).resolve().parents[1] / "BENCH_decision_trace.json"
+    if not bench.exists():
+        pytest.skip("no committed decision-cost baseline to compare against")
+    rows = json.loads(bench.read_text())["rows"]
+    row = rows.get("decision_trace_L100000_S1")
+    if row is None:
+        pytest.skip("baseline lacks the L=100k reference row")
+    decision_us = float(row["fused_us"])
+
+    # the engine's per-event obs sites with every plane disabled: four
+    # attribute loads + None checks (src/repro/stream/engine.py _drain)
+    eng = _factory()()
+    assert (eng.exporter is None and eng.health is None
+            and eng.forensics is None and eng.metrics is None)
+
+    def sites():
+        if eng.forensics is not None:
+            eng.forensics.begin_event(0.0, 0)
+        if eng.metrics is not None:
+            pass
+        if eng.health is not None:
+            eng._health_tick()
+        if eng.exporter is not None:
+            eng.exporter.tick(0.0, 0)
+
+    iters = 20_000
+    for _ in range(500):            # warm the attribute caches
+        sites()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sites()
+    site_us = (time.perf_counter() - t0) / iters * 1e6
+    assert site_us < 0.01 * decision_us, (
+        f"disabled obs stack costs {site_us:.3f}µs — more than 1% of the "
+        f"committed L=100k decision ({decision_us:.0f}µs)")
