@@ -1,0 +1,209 @@
+"""Capacity plane measurements: weak-scaling-gap decomposition, per-shard
+skew, dispatch overhead, and accounting-sample cost
+(-> BENCH_capacity.json).
+
+BENCH_shard_scale.json reports the symptom — weak-scaling efficiency 0.16
+at S=8 (44.9ms at S=1/25k models vs 282.4ms at S=8/200k) — without naming
+a cause.  This suite decomposes that gap into the three candidate causes
+the sharded program can exhibit, each measured independently:
+
+* ``capacity_weak_gap_L{n}_S{s}`` — the decomposition row.  The *gap* is
+  fused(S) - fused(S=1) at fixed per-shard load (weak scaling: each
+  shard's slice is constant, so a perfectly scaling program has gap 0).
+  Attribution terms, all deltas vs the S=1 reference:
+    - ``skew_us``      — (readout + score) phase time growth: per-shard
+      compute that should be constant but grows with S (on this CPU
+      container the forced host "devices" share physical cores, so this
+      term is contention + scheduler imbalance — exactly what the barrier
+      at the slowest shard turns into decision latency);
+    - ``allgather_us`` — gather/pick phase growth: the cross-shard
+      candidate exchange, the only term that *must* grow with S;
+    - ``dispatch_us``  — growth of a trivially small shard_map program's
+      per-call time: partitioning + launch overhead, independent of |L|.
+  ``attributed_pct`` = their sum over the gap.  **Acceptance: >= 80% at
+  S=8** (asserted at measurement time, like decision_trace's >= 90% span
+  bar).  Phase deltas come from separately jitted phase programs
+  (``ShardedScorer.phase_times``), so their sum can legitimately land
+  above 100% of the fused gap — attribution is about naming causes, the
+  fused number is about speed.
+
+* ``capacity_shard_skew_S{s}`` — the same per-shard workload pinned to
+  each device in turn (single-device meshes, ``obs.profile.per_shard_skew``);
+  ``skew`` is max/mean, the time-axis twin of the layout plane's slot
+  imbalance index.
+
+* ``capacity_accounting_sample`` — the cost of one
+  ``CapacityAccountant.sample`` pass (capacity_stats introspection + gauge
+  publication) on a churned control plane: the price the engines pay per
+  sampled window, which must stay negligible next to a decision.
+
+Committed numbers use the BENCH_shard_scale protocol:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+from .common import emit, time_us
+from .decision_trace import _setup
+from .shard_scale import TOPK, _synthetic_state
+
+
+def _mesh_sizes() -> list[int]:
+    """(1, S) with S the full host mesh capped at the committed protocol's
+    8 — so the 8-device protocol measures S=8 and the CI smoke's forced
+    4-device host still exercises the multi-shard decomposition at S=4."""
+    import jax
+    avail = min(len(jax.devices()), 8)
+    return [1] if avail == 1 else [1, avail]
+
+
+def bench_weak_gap() -> None:
+    from repro.obs.profile import dispatch_overhead_us
+
+    fast = common.FAST          # read at call time: --smoke sets it late
+    iters = 5 if fast else 20
+    per_shard = 2048 if fast else 25_000
+    meshes = _mesh_sizes()
+
+    # the S=1 reference: same per-shard load, no sharding
+    sc1, args1 = _setup(per_shard, 1)
+    fused1 = time_us(sc1.readout_decide_topk, *args1, iters=iters,
+                     warmup=2, sync=True)
+    ph1 = sc1.phase_times(*args1, iters=iters, warmup=2)
+    disp1 = dispatch_overhead_us(sc1.mesh)
+    emit(f"capacity_weak_gap_L{per_shard}_S1", fused1,
+         live_models=per_shard, shards=1, per_shard=per_shard,
+         readout_us=f"{ph1['readout_us']:.1f}",
+         score_us=f"{ph1['score_us']:.1f}",
+         gather_us=f"{ph1['gather_us']:.1f}",
+         dispatch_us=f"{disp1:.1f}")
+
+    for s in meshes:
+        if s == 1:
+            continue
+        n = per_shard * s
+        sc, args = _setup(n, s)
+        fused = time_us(sc.readout_decide_topk, *args, iters=iters,
+                        warmup=2, sync=True)
+        ph = sc.phase_times(*args, iters=iters, warmup=2)
+        disp = dispatch_overhead_us(sc.mesh)
+
+        gap = fused - fused1
+        skew = ((ph["readout_us"] + ph["score_us"])
+                - (ph1["readout_us"] + ph1["score_us"]))
+        gather = ph["gather_us"] - ph1["gather_us"]
+        dispatch = disp - disp1
+        attributed = (100.0 * (skew + gather + dispatch) / gap
+                      if gap > 0 else 0.0)
+        emit(f"capacity_weak_gap_L{n}_S{s}", fused,
+             live_models=n, shards=s, per_shard=per_shard,
+             base_us=f"{fused1:.1f}", gap_us=f"{gap:.1f}",
+             skew_us=f"{skew:.1f}", allgather_us=f"{gather:.1f}",
+             dispatch_us=f"{dispatch:.1f}",
+             attributed_pct=f"{attributed:.1f}")
+        # the tentpole acceptance bar, enforced at measurement time
+        assert fast or s < 8 or attributed >= 80.0, (
+            f"decomposition attributes only {attributed:.1f}% of the "
+            f"S={s} weak-scaling gap (need >= 80%)")
+
+
+def bench_shard_skew() -> None:
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.obs.profile import per_shard_skew
+    from repro.shardgp import ShardedScorer
+    from repro.shardgp.score import P_MODELS, P_W
+
+    fast = common.FAST
+    iters = 3 if fast else 10
+    per_shard = 2048 if fast else 25_000
+    devices = jax.devices()[:max(_mesh_sizes())]
+    if len(devices) < 2:
+        return                 # one device: no skew to measure
+
+    def make_thunk(shard_index: int, mesh):
+        # every device gets the IDENTICAL single-shard workload — any
+        # timing spread is the platform's, not the data's
+        rng = np.random.default_rng(0)
+        num_tenants = max(8, min(256, per_shard // 64))
+        (W, alpha, mu0, kdiag, best, member, cost,
+         selected) = _synthetic_state(per_shard, num_tenants, rng)
+        sc = ShardedScorer(topk=TOPK, mesh=mesh)
+        sc.refresh(member, cost)
+        W = jax.device_put(W, NamedSharding(mesh, P_W))
+        mu0 = jax.device_put(mu0, NamedSharding(mesh, P_MODELS))
+        kdiag = jax.device_put(kdiag, NamedSharding(mesh, P_MODELS))
+        sel = jax.device_put(selected, NamedSharding(mesh, P_MODELS))
+        return lambda: sc.readout_decide_topk(W, alpha, mu0, kdiag,
+                                              best, sel)
+
+    res = per_shard_skew(make_thunk, devices, iters=iters, warmup=2)
+    per = ";".join(f"{u:.0f}" for u in res["per_shard_us"])
+    emit(f"capacity_shard_skew_S{len(devices)}", res["mean_us"],
+         shards=len(devices), per_shard=per_shard,
+         max_us=f"{res['max_us']:.1f}", min_us=f"{res['min_us']:.1f}",
+         skew=f"{res['skew']:.3f}", per_shard_us=per)
+
+
+def bench_accounting_sample() -> None:
+    from repro.core import ControlPlane
+    from repro.core.tenancy import _matern_block_chol
+    from repro.obs import CapacityAccountant, MetricsRegistry
+
+    fast = common.FAST
+    tenants = 16 if fast else 128
+    m = 16
+    shards = max(_mesh_sizes())
+    K_block, _ = _matern_block_chol(m, 0.2, 0.04)
+    cp = ControlPlane(np.random.default_rng(0), model_capacity=tenants * m,
+                      tenant_capacity=tenants, num_shards=shards)
+    rng = np.random.default_rng(1)
+    for _ in range(tenants):
+        h = cp.add_tenant(K_block, np.zeros(m), np.ones(m))
+        g = int(h.models[rng.integers(m)])
+        cp.record_start(g)
+        cp.record_observation(g, float(rng.uniform()))
+
+    class _EngineShim:
+        """The minimal engine surface ``CapacityAccountant.sample`` reads —
+        measures the sample pass itself, not a full engine run."""
+        def __init__(self, cp):
+            self.cp = cp
+            self.fleet = type("F", (), {"slices": []})()
+            self.health = None
+
+        def _capacity_extra(self):
+            return {}
+
+    shim = _EngineShim(cp)
+    acc = CapacityAccountant(MetricsRegistry())
+    us = time_us(lambda: acc.sample(0.0, 0, shim),
+                 iters=50 if fast else 200, warmup=5)
+    acc.samples.clear()
+    emit("capacity_accounting_sample", us, tenants=tenants,
+         models=tenants * m, shards=shards)
+
+
+def main() -> None:
+    bench_weak_gap()
+    bench_shard_skew()
+    bench_accounting_sample()
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="toy shapes (same effect as BENCH_FAST=1)")
+    if p.parse_args().smoke:
+        common.set_fast(True)
+    common.begin_suite("capacity")
+    main()
+    path = common.end_suite()
+    if path is not None:
+        print(f"# wrote {path}", file=sys.stderr)

@@ -26,7 +26,10 @@ FAST = os.environ.get("BENCH_FAST", "0") == "1"
 # Version of the BENCH_<suite>.json payload shape.  Bump when the envelope
 # changes incompatibly; row keys may grow freely within a version.
 #   1: {"schema_version", "git_sha", "suite", "rows": {name: {...}}}
-#      (pre-versioned files were the bare rows dict)
+#      (pre-versioned files were the bare rows dict); the optional
+#      "environment" stamp (platform/device/fast metadata consumed by
+#      benchmarks/regress.py) grew within version 1 — payloads without it
+#      are legacy baselines, compared only under --allow-legacy.
 BENCH_SCHEMA_VERSION = 1
 
 
@@ -55,6 +58,34 @@ def git_sha() -> str:
     except Exception:
         pass
     return "unknown"
+
+
+def environment() -> dict:
+    """The measurement environment stamp that rides in every BENCH payload.
+
+    ``benchmarks/regress.py`` matches these fields before diffing two runs:
+    timings from different platforms, device kinds/counts, or fast-mode
+    settings are apples-to-oranges and must be refused, not averaged.
+    Device fields degrade to "none"/0 when jax is unavailable so the stamp
+    itself never fails a suite.
+    """
+    import platform
+    env = {
+        "platform": platform.system().lower() or "unknown",
+        "machine": platform.machine() or "unknown",
+        "python": platform.python_version(),
+        "fast": FAST,
+        "device_kind": "none",
+        "device_count": 0,
+    }
+    try:
+        import jax
+        devs = jax.devices()
+        env["device_kind"] = devs[0].device_kind if devs else "none"
+        env["device_count"] = len(devs)
+    except Exception:
+        pass
+    return env
 
 # rows of the suite currently being recorded (None = recording disabled);
 # benchmarks/run.py brackets each section with begin_suite()/end_suite() so
@@ -85,6 +116,7 @@ def end_suite(out_dir: str | Path = ".") -> Path | None:
         "schema_version": BENCH_SCHEMA_VERSION,
         "git_sha": git_sha(),
         "suite": name,
+        "environment": environment(),
         "rows": rows,
     }
     path = Path(out_dir) / f"BENCH_{name}.json"

@@ -26,6 +26,10 @@ Sections (default: all):
             stack as a share of a decision (< 1% bar) + per-plane enabled
             costs — export tick, health detectors, forensics record
             (obs_overhead, DESIGN.md §14)
+  capacity  capacity plane: weak-scaling-gap decomposition into per-shard
+            skew / all_gather / dispatch (>= 80% attributed bar at S=8),
+            per-device skew probe, accounting-sample cost (capacity,
+            DESIGN.md §15; multi-shard rows need forced host devices)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -53,7 +57,7 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "devchurn", "eventlog", "dtrace", "obs", "roofline")
+            "devchurn", "eventlog", "dtrace", "obs", "capacity", "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
@@ -61,7 +65,7 @@ SUITE_NAMES = {
     "control": "control_plane", "stream": "stream_churn",
     "shard": "shard_scale", "devchurn": "device_churn",
     "eventlog": "eventlog", "dtrace": "decision_trace",
-    "obs": "obs_overhead", "roofline": "roofline",
+    "obs": "obs_overhead", "capacity": "capacity", "roofline": "roofline",
 }
 
 
@@ -121,6 +125,8 @@ def main() -> None:
                 from . import decision_trace as m
             elif section == "obs":
                 from . import obs_overhead as m
+            elif section == "capacity":
+                from . import capacity as m
             elif section == "roofline":
                 from . import roofline as m
             else:

@@ -20,6 +20,10 @@ Hand-builds a churn trace engineered to trip each detector class of
   slo_burn         the SLO demands device_utilization >= 0.9 from a mostly
                    idle fleet — every window burns, so the burn rate hits
                    1.0 (severity ``page``)
+  memory_runaway   the memory budget (1 KiB) is smaller than tenant 0's
+                   posterior block alone — the capacity plane's very first
+                   sample projects (and already measures) bytes over
+                   budget (severity ``page``)
 
 The run also exercises the rest of the live plane — windowed metrics
 export, per-decision forensics — and re-runs a bare twin to assert the
@@ -39,8 +43,9 @@ import json
 import numpy as np
 
 from repro.core.fleet import Fleet
-from repro.obs import (ALERT_KINDS, ForensicsRecorder, HealthMonitor,
-                       MetricsExporter, MetricsRegistry, Tracer)
+from repro.obs import (ALERT_KINDS, CapacityAccountant, ForensicsRecorder,
+                       HealthMonitor, MetricsExporter, MetricsRegistry,
+                       Tracer)
 from repro.stream import (ChurnTrace, StreamEngine, TenantArrive,
                           TenantDepart)
 
@@ -96,9 +101,10 @@ def main() -> None:
                 health=HealthMonitor(
                     slo=SLO, window=10.0, burn_windows=2,
                     burn_threshold=0.75, stall_k=8, queue_limit=6,
-                    starvation_window=10.0),
+                    starvation_window=10.0, memory_budget_bytes=1024),
                 forensics=ForensicsRecorder())
             kw["exporter"] = MetricsExporter(kw["metrics"], window=10.0)
+            kw["accounting"] = CapacityAccountant(kw["metrics"], window=10.0)
         return StreamEngine(fleet, "mdmt", seed=0, max_live_models=20, **kw)
 
     eng = make_engine()
@@ -124,7 +130,8 @@ def main() -> None:
             == [dataclasses.astuple(t) for t in twin.trials])
     print(f"\nbare twin identical={same}; "
           f"{len(eng.forensics.records)} forensics records, "
-          f"{len(eng.exporter.records)} export windows")
+          f"{len(eng.exporter.records)} export windows, "
+          f"{len(eng.accounting.samples)} capacity samples")
     assert same, "an observability plane changed the decision sequence"
 
     if args.report_dir:
@@ -134,6 +141,7 @@ def main() -> None:
             telemetry=res.telemetry, tracer=eng.tracer,
             metrics=eng.metrics, result=res,
             alerts=eng.health.alerts, forensics=eng.forensics.records,
+            accounting=eng.accounting,
             meta={"policy": "mdmt", "slices": 4, "seed": 0,
                   "events": trace.num_events, "slo": SLO,
                   "adversarial": True})

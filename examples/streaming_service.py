@@ -12,9 +12,11 @@ the run is killed at processed event N, rebuilt from its durable log +
 newest snapshot, resumed, and compared against an uninterrupted run.
 ``--trace`` runs with the obs planes live (decision-path spans + metrics
 registry + windowed export, DESIGN.md §13-§14), ``--health`` attaches the
-SLO burn-rate / watchdog monitor, and ``--forensics`` records per-decision
-attribution; any of them triggers a bare twin re-run to verify the
-observation-only guarantee: both trial sequences must be byte-identical.
+SLO burn-rate / watchdog monitor, ``--forensics`` records per-decision
+attribution, and ``--capacity`` attaches the resource accountant
+(posterior bytes, shard occupancy, projected-bytes feed — DESIGN.md §15);
+any of them triggers a bare twin re-run to verify the observation-only
+guarantee: both trial sequences must be byte-identical.
 ``--report-dir PATH`` renders the per-run experiment directory
 (``PATH/<run_id>/`` with summary.json, timeline.csv, self-contained
 report.html, plus alerts.jsonl / forensics.jsonl when those planes ran).
@@ -24,7 +26,7 @@ Used by CI as a smoke test:
   PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
   PYTHONPATH=src python examples/streaming_service.py --events 50 --crash-at 40
   PYTHONPATH=src python examples/streaming_service.py --events 60 --trace \\
-      --health --forensics --report-dir obs_report
+      --health --forensics --capacity --report-dir obs_report
 """
 
 from __future__ import annotations
@@ -111,6 +113,10 @@ def main() -> None:
                    help="record per-decision attribution (winner/runner-up "
                         "EIrate, margin, uniform-cost counterfactual — "
                         "DESIGN.md §14)")
+    p.add_argument("--capacity", action="store_true",
+                   help="attach the capacity accountant (per-tenant "
+                        "posterior bytes, shard occupancy, projected-bytes "
+                        "memory watchdog feed — DESIGN.md §15)")
     p.add_argument("--report-dir", default=None, metavar="PATH",
                    help="write the per-run experiment directory "
                         "(PATH/<run_id>/ with summary.json, timeline.csv, "
@@ -152,6 +158,11 @@ def main() -> None:
         if args.forensics and "forensics" not in kw:
             from repro.obs import ForensicsRecorder
             kw["forensics"] = ForensicsRecorder()
+        if args.capacity and "accounting" not in kw:
+            from repro.obs import CapacityAccountant, MetricsRegistry
+            if "metrics" not in kw:
+                kw["metrics"] = MetricsRegistry()
+            kw["accounting"] = CapacityAccountant(kw["metrics"], window=20.0)
         if args.device_churn:
             reg = two_class_registry(2.0, overhead=0.5, chips=32)
             half = max(1, args.slices // 2)
@@ -215,13 +226,21 @@ def main() -> None:
         if recs:
             print("  sample:", json.dumps(recs[0]))
 
-    if args.trace or args.health or args.forensics:
-        # the observation-only guarantee (DESIGN.md §13-§14): a bare twin
+    if args.capacity:
+        last = eng.accounting.latest() or {}
+        print(f"\ncapacity: {len(eng.accounting.samples)} samples; final "
+              f"gp_bytes={last.get('gp_bytes')} "
+              f"projected={last.get('gp_bytes_projected')} "
+              f"imbalance={last.get('load_imbalance')}")
+
+    if args.trace or args.health or args.forensics or args.capacity:
+        # the observation-only guarantee (DESIGN.md §13-§15): a bare twin
         # of the same run must make byte-identical decisions — spans,
-        # exports, alerts, and forensics observe the engine's jit
-        # programs, they never change them
+        # exports, alerts, forensics, and capacity samples observe the
+        # engine's jit programs, they never change them
         twin = make_engine(tracer=None, metrics=None, exporter=None,
-                           health=None, forensics=None).run(trace)
+                           health=None, forensics=None,
+                           accounting=None).run(trace)
         same = ([dataclasses.astuple(t) for t in res.trials]
                 == [dataclasses.astuple(t) for t in twin.trials])
         n_spans = len(eng.tracer.records()) if args.trace else 0
@@ -239,6 +258,7 @@ def main() -> None:
             result=res,
             alerts=eng.health.alerts if args.health else None,
             forensics=eng.forensics.records if args.forensics else None,
+            accounting=eng.accounting if args.capacity else None,
             meta={"policy": args.policy, "slices": args.slices,
                   "seed": args.seed, "events": trace.num_events,
                   "traced": args.trace, "wall_s": round(wall, 3),

@@ -547,6 +547,29 @@ class ControlPlane:
         if self._sharded is not None:
             self._sharded.tracer = tracer
 
+    def capacity_stats(self) -> dict:
+        """Host-side resource accounting of the posterior + index space —
+        the capacity plane's one-stop introspection point
+        (``obs/accounting.py``).  GP stats come from
+        :meth:`BlockIncrementalGP.resource_stats` keyed back to *tenant*
+        slots (block ids are internal); layout occupancy is per shard span.
+        Closed-world instances (``from_problem``) have no layout and a
+        possibly non-block GP — both degrade to None rather than faking
+        numbers.  No device syncs anywhere on this path."""
+        gp_stats = None
+        if hasattr(self.gp, "resource_stats"):
+            gp_stats = self.gp.resource_stats()
+            if "blocks" in gp_stats:
+                bid_to_tid = {bid: tid for tid, bid in self._block_ids.items()}
+                # closed-world blocks (from_problem) have no tenant slot
+                # mapping — fall back to the block id itself
+                gp_stats["tenants"] = {
+                    bid_to_tid.get(bid, bid): stats
+                    for bid, stats in gp_stats.pop("blocks").items()}
+        layout = (self._layout.occupancy()
+                  if self._layout is not None else None)
+        return {"gp": gp_stats, "layout": layout}
+
     def set_forensics(self, recorder) -> None:
         """Install a ``repro.obs.ForensicsRecorder`` on the decision path.
         Observation-only: when enabled, the sharded path keeps the top-k the

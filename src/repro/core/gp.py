@@ -165,6 +165,24 @@ class IncrementalGP:
     def num_observed(self) -> int:
         return self._k
 
+    def resource_stats(self) -> dict:
+        """Analytic byte/observation accounting of this engine's buffers
+        (obs/accounting.py introspects through here, never through the
+        private attributes).  ``alloc_bytes`` is the preallocated footprint
+        — W (n,n) + K (n,n) + alpha/diag_acc/mu0 (n,) each; ``active_bytes``
+        is the Cholesky-occupied share, the O(k·n) rows [0, k) of W plus k
+        entries of alpha — the part that grows O(obs²) when n tracks the
+        observed set."""
+        item = self.K.dtype.itemsize
+        n, k = self.n, self._k
+        return {
+            "models": n,
+            "obs": k,
+            "alloc_bytes": (2 * n * n + 3 * n) * item,
+            "active_bytes": (k * n + k) * item,
+            "dtype_bytes": item,
+        }
+
     def posterior(self) -> tuple[jax.Array, jax.Array]:
         """(mu, var) over all n models, O(n^2) readout (jitted, row-major)."""
         if self._kdiag is None:
@@ -333,6 +351,27 @@ class BlockIncrementalGP:
     @property
     def num_observed(self) -> int:
         return len(self.observed)
+
+    def resource_stats(self) -> dict:
+        """Per-block + aggregate resource accounting (obs/accounting.py).
+
+        ``blocks`` maps block id -> the owning :class:`IncrementalGP`'s
+        :meth:`~IncrementalGP.resource_stats`; the aggregate adds the host
+        readout caches (``_mu``/``_var``, float32 over the full capacity).
+        Pure host-side introspection: no device syncs, so the accounting
+        plane's disabled-path cost discipline holds."""
+        blocks = {bid: eng.resource_stats()
+                  for bid, eng in sorted(self._engines.items())}
+        readout = 2 * self.n * 4          # _mu + _var, float32 each
+        return {
+            "blocks": blocks,
+            "num_blocks": len(blocks),
+            "capacity": self.n,
+            "obs_total": sum(b["obs"] for b in blocks.values()),
+            "alloc_bytes": sum(b["alloc_bytes"] for b in blocks.values()),
+            "active_bytes": sum(b["active_bytes"] for b in blocks.values()),
+            "readout_bytes": readout,
+        }
 
     def _flush(self) -> None:
         import numpy as np

@@ -204,6 +204,15 @@ class DevPlaneEngine(StreamEngine):
         self._autoscale_leaves = extra["autoscale_leaves"]
         self._scoring_passes = extra["scoring_passes"]
 
+    def _capacity_extra(self) -> dict:
+        """Elastic-fleet counters for the capacity plane
+        (``capacity.autoscale_joins`` ... gauges, obs/accounting.py)."""
+        return {
+            "autoscale_joins": self._autoscale_joins,
+            "autoscale_leaves": self._autoscale_leaves,
+            "scoring_passes": self._scoring_passes,
+        }
+
     # ---- autoscale ---------------------------------------------------------
 
     def _post_event(self, kind: str) -> None:

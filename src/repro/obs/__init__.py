@@ -43,6 +43,19 @@ monitoring system:
                 margin, uniform-cost counterfactual) from the top-k the
                 scoring program already materializes.
 
+The *capacity* layer (DESIGN.md §15) accounts for the resources both of
+the above spend:
+
+  accounting.py :class:`CapacityAccountant` — per-tenant GP posterior byte
+                accounting, shard slot occupancy + load imbalance, fleet
+                composition, and a projected-bytes-at-horizon feed for the
+                health plane's memory watchdog; published as labeled
+                ``capacity.*`` gauges through the registry/exporter.
+  profile.py    device-time attribution: ``jax.profiler`` capture windows,
+                per-shard timing-skew probes, and a shard_map dispatch-
+                overhead probe — the machinery behind BENCH_capacity.json's
+                weak-scaling-gap decomposition.
+
 Everything here is observation-only: a traced run's trial sequence is
 byte-identical to an untraced run's (CI asserts it), spans/metrics never
 enter engine snapshots, and trace ids are derived from processed-event
@@ -50,9 +63,11 @@ indices so a crash-recovered run re-emits the identical span tree for the
 replayed suffix (tests/test_obs.py).
 """
 
+from .accounting import CapacityAccountant  # noqa: F401
 from .export import MetricsExporter, prometheus_text  # noqa: F401
 from .forensics import ForensicsRecorder  # noqa: F401
 from .health import ALERT_KINDS, Alert, HealthMonitor  # noqa: F401
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .profile import capture, profiler_available  # noqa: F401
 from .report import aggregate_spans, write_report  # noqa: F401
 from .trace import NULL_TRACER, Tracer  # noqa: F401

@@ -18,6 +18,12 @@ exposition format — labeled series produced by
 ``MetricsRegistry.counter(name, labels=...)`` already carry
 ``name{k="v"}`` flat keys, so the rendering is mostly name sanitization
 plus histogram summary expansion (``_count``/``_sum``/quantile series).
+The capacity plane's gauges (``capacity.gp_bytes``,
+``capacity.shard_slots{shard="0"}`` ... — obs/accounting.py) flow through
+unchanged; health-plane alert *counts* are not registry metrics, so the
+exporter renders them itself (``health_alerts_total{kind="..."}``) when a
+``HealthMonitor`` is attached — alerts previously reached only
+alerts.jsonl and the report, never the scrape surface.
 """
 
 from __future__ import annotations
@@ -97,14 +103,21 @@ class MetricsExporter:
     The only mutable cursor (``last window emitted``) has
     ``state_dict``/``load_state`` hooks; engines persist it in their
     snapshots so a recovered run's suffix emits the identical windows.
+
+    ``health`` (a ``HealthMonitor``, attached by the engine when both
+    planes run) folds per-kind alert counts into every snapshot record and
+    into the Prometheus rendering as ``health_alerts_total{kind="..."}``.
+    Alert counts are a pure function of the event stream (health.py), so
+    the records stay replay-stable.
     """
 
     def __init__(self, metrics, path: str | None = None,
-                 window: float = 10.0):
+                 window: float = 10.0, health=None):
         if window <= 0:
             raise ValueError("window must be positive")
         self.metrics = metrics
         self.window = float(window)
+        self.health = health
         self.records: list[dict] = []
         self._last_window = -1
         self._fh = open(path, "a", encoding="utf-8") if path else None
@@ -115,27 +128,46 @@ class MetricsExporter:
             self._fh.write(json.dumps(rec, allow_nan=False) + "\n")
             self._fh.flush()
 
+    def _alert_counts(self) -> dict[str, int] | None:
+        if self.health is None:
+            return None
+        counts: dict[str, int] = {}
+        for a in self.health.alerts:
+            counts[a.kind] = counts.get(a.kind, 0) + 1
+        return dict(sorted(counts.items()))
+
+    def _record(self, t: float, event_index: int, **extra) -> dict:
+        rec = {"schema_version": EXPORT_SCHEMA_VERSION,
+               "window": int(t // self.window), "t": float(t),
+               "event_index": int(event_index), **extra,
+               "metrics": self.metrics.snapshot()}
+        alerts = self._alert_counts()
+        if alerts is not None:
+            rec["alerts"] = alerts
+        return rec
+
     def tick(self, t: float, event_index: int) -> None:
         w = int(t // self.window)
         if w <= self._last_window:
             return
         self._last_window = w
-        self._emit({"schema_version": EXPORT_SCHEMA_VERSION,
-                    "window": w, "t": float(t),
-                    "event_index": int(event_index),
-                    "metrics": self.metrics.snapshot()})
+        self._emit(self._record(t, event_index))
 
     def final(self, t: float, event_index: int) -> None:
         """End-of-run flush: one closing record regardless of window
         position (both the uninterrupted run and a resumed run end at the
         same sim-time, so this too replays stably)."""
-        self._emit({"schema_version": EXPORT_SCHEMA_VERSION,
-                    "window": int(t // self.window), "t": float(t),
-                    "event_index": int(event_index), "final": True,
-                    "metrics": self.metrics.snapshot()})
+        self._emit(self._record(t, event_index, final=True))
 
     def prometheus(self) -> str:
-        return prometheus_text(self.metrics.snapshot())
+        text = prometheus_text(self.metrics.snapshot())
+        alerts = self._alert_counts()
+        if alerts is None:
+            return text
+        lines = ["# TYPE health_alerts_total counter"]
+        for kind, n in alerts.items():
+            lines.append(f'health_alerts_total{{kind="{kind}"}} {n}')
+        return text + "\n".join(lines) + "\n"
 
     def state_dict(self) -> dict:
         return {"last_window": self._last_window}

@@ -37,6 +37,12 @@ Detectors:
   dropped to within ``conditioning_scale`` of the jitter floor: the
   posterior update is numerically degenerate (near-duplicate model under
   the kernel), deduped to one alert per tenant per window.
+* **memory_runaway** — the capacity plane's projected posterior bytes at
+  its horizon (``obs/accounting.py``, a pure function of the event
+  stream) crossed ``memory_budget_bytes``: the admission rate is
+  outrunning the memory budget and will blow it *before* it actually
+  does.  Severity ``page`` once current bytes already exceed the budget;
+  re-arms when the projection drops back under 80% of it.
 """
 
 from __future__ import annotations
@@ -47,7 +53,7 @@ HEALTH_SCHEMA_VERSION = 1
 
 #: alert kinds, in severity-report order
 ALERT_KINDS = ("slo_burn", "regret_stall", "queue_runaway",
-               "class_starvation", "gp_conditioning")
+               "class_starvation", "gp_conditioning", "memory_runaway")
 
 
 @dataclass(frozen=True)
@@ -92,7 +98,8 @@ class HealthMonitor:
                  burn_windows: int = 3, burn_threshold: float = 0.75,
                  stall_k: int = 12, queue_limit: int = 16,
                  starvation_window: float = 30.0,
-                 conditioning_scale: float = 10.0):
+                 conditioning_scale: float = 10.0,
+                 memory_budget_bytes: float | None = None):
         if window <= 0:
             raise ValueError("window must be positive")
         self.slo = dict(slo or {})
@@ -103,6 +110,8 @@ class HealthMonitor:
         self.queue_limit = int(queue_limit)
         self.starvation_window = float(starvation_window)
         self.conditioning_scale = float(conditioning_scale)
+        self.memory_budget_bytes = (None if memory_budget_bytes is None
+                                    else float(memory_budget_bytes))
 
         self.alerts: list[Alert] = []
         self._drained = 0
@@ -117,6 +126,7 @@ class HealthMonitor:
         self._class_last: dict[str, float] = {}     # cls -> last launch/seen t
         self._class_armed: dict[str, bool] = {}
         self._cond_last_window: dict[str, int] = {}  # tenant -> window
+        self._mem_armed = True
 
     # -- emission ---------------------------------------------------------
 
@@ -163,6 +173,26 @@ class HealthMonitor:
                     self._alert(t, event_index, "gp_conditioning", "warn",
                                 key, model=int(model), d2=float(d2),
                                 jitter=float(jitter))
+
+    def on_capacity(self, t: float, event_index: int, *, bytes_now: float,
+                    projected_bytes: float) -> None:
+        """Fed by the capacity accountant at its sample boundaries (so the
+        input cadence — and thus the alert sequence — is a pure function of
+        the event stream).  No-op without a configured budget."""
+        budget = self.memory_budget_bytes
+        if budget is None:
+            return
+        if projected_bytes >= budget:
+            if self._mem_armed:
+                self._mem_armed = False
+                self._alert(t, event_index, "memory_runaway",
+                            "page" if bytes_now >= budget else "warn",
+                            "gp_posterior",
+                            bytes_now=float(bytes_now),
+                            projected_bytes=float(projected_bytes),
+                            budget_bytes=float(budget))
+        elif projected_bytes <= 0.8 * budget:
+            self._mem_armed = True
 
     def on_event(self, t: float, event_index: int, *, queue_depth: int,
                  backlog: int, free_classes: tuple[str, ...] = (),
@@ -237,6 +267,7 @@ class HealthMonitor:
             "class_last": dict(self._class_last),
             "class_armed": dict(self._class_armed),
             "cond_last_window": dict(self._cond_last_window),
+            "mem_armed": self._mem_armed,
         }
 
     def load_state(self, state: dict) -> None:
@@ -255,6 +286,8 @@ class HealthMonitor:
                              for k, v in state["class_armed"].items()}
         self._cond_last_window = {k: int(v) for k, v
                                   in state["cond_last_window"].items()}
+        # tolerant of pre-capacity-plane snapshots (no mem_armed key)
+        self._mem_armed = bool(state.get("mem_armed", True))
         # alerts are NOT restored: the durable prefix lives in the event
         # log's alerts.jsonl; a resumed run re-emits only its suffix
         self.alerts = []

@@ -213,6 +213,32 @@ def _forensics_section(records: list[dict], limit: int = 30) -> str:
          "runner-up", "margin", "uniform-cost"], rows, left={3, 10})
 
 
+def _capacity_section(sample: dict | None) -> str:
+    if not sample:
+        return ("<p class='muted'>No capacity samples — run with a "
+                "<code>CapacityAccountant</code> attached for posterior "
+                "byte accounting and shard occupancy.</p>")
+    scalar_rows = []
+    for key in ("gp_blocks", "gp_obs", "gp_alloc_bytes", "gp_active_bytes",
+                "gp_readout_bytes", "gp_bytes", "gp_bytes_projected",
+                "slots_total", "slots_live", "slots_free", "load_imbalance",
+                "autoscale_joins", "autoscale_leaves", "scoring_passes"):
+        if key in sample:
+            scalar_rows.append([html.escape(key), _fmt(sample[key])])
+    for cls, n in sorted((sample.get("devices") or {}).items()):
+        scalar_rows.append([f"devices[{html.escape(cls)}]", n])
+    head = (f"<p class='muted'>final sample at t={_fmt(sample['t'], 2)} "
+            f"(event {sample['event_index']}); projected bytes use the "
+            f"accountant's horizon slope fit.</p>")
+    out = head + _table(["capacity metric", "value"], scalar_rows, left={0})
+    shard_slots = sample.get("shard_slots")
+    if shard_slots:
+        out += _table(["shard", "live slots"],
+                      [[s, n] for s, n in enumerate(shard_slots)],
+                      left=set())
+    return out
+
+
 def _slo_section(summary: dict, slo: dict) -> str:
     rows = []
     for key in ("ttfo_p50", "ttfo_p99", "serve_gap_p50", "serve_gap_max",
@@ -237,7 +263,8 @@ def _render_html(run_id: str, meta: dict, summary: dict,
                  span_agg: dict[str, dict], metrics: dict | None,
                  per_tenant: dict | None, per_device: dict | None,
                  alerts: list[dict] | None = None,
-                 forensics: list[dict] | None = None) -> str:
+                 forensics: list[dict] | None = None,
+                 capacity: dict | None = None) -> str:
     parts = [f"<!doctype html><html><head><meta charset='utf-8'>"
              f"<title>run {html.escape(run_id)}</title>"
              f"<style>{_CSS}</style></head><body>"]
@@ -255,6 +282,9 @@ def _render_html(run_id: str, meta: dict, summary: dict,
 
     parts.append("<h2>Health alerts</h2>")
     parts.append(_alerts_section(list(alerts or [])))
+
+    parts.append("<h2>Capacity</h2>")
+    parts.append(_capacity_section(capacity))
 
     parts.append("<h2>Decision forensics</h2>")
     parts.append(_forensics_section(list(forensics or [])))
@@ -312,7 +342,7 @@ def _render_html(run_id: str, meta: dict, summary: dict,
 def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
                  tracer=None, metrics=None, result=None,
                  meta: dict | None = None, alerts=None,
-                 forensics=None) -> Path:
+                 forensics=None, accounting=None) -> Path:
     """Render one per-run experiment directory and return its path.
 
     Args:
@@ -334,6 +364,8 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
                  (``ForensicsRecorder.records``); the smallest-margin
                  decisions are tabulated and the raw stream lands in
                  ``forensics.jsonl``.
+      accounting: a ``CapacityAccountant`` (its final sample feeds the
+                 capacity section and ``summary.json["capacity"]``).
     """
     meta = dict(meta or {})
     alert_recs = [a.to_record() if hasattr(a, "to_record") else a
@@ -369,6 +401,8 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
             "decisions": len(forensic_recs),
             "uniform_cost_flips": cf_flips,
         },
+        "capacity": (accounting.latest()
+                     if accounting is not None else None),
     }
     (run_dir / "summary.json").write_text(
         json.dumps(payload, indent=2, sort_keys=True, allow_nan=False))
@@ -380,7 +414,8 @@ def write_report(out_dir: str | Path, run_id: str, *, telemetry=None,
 
     (run_dir / "report.html").write_text(_render_html(
         run_id, meta, summary, span_agg, metric_snap, per_tenant,
-        per_device, alerts=alert_recs, forensics=forensic_recs))
+        per_device, alerts=alert_recs, forensics=forensic_recs,
+        capacity=accounting.latest() if accounting is not None else None))
 
     if alert_recs:
         with open(run_dir / "alerts.jsonl", "w") as f:

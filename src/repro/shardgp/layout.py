@@ -154,6 +154,23 @@ class ShardLayout:
             return 1.0
         return max(counts) / (total / self.num_shards)
 
+    def occupancy(self) -> dict:
+        """The capacity plane's structured view (obs/accounting.py): per-
+        shard live slot counts plus the aggregate slot budget and the
+        load-imbalance index, in one pass over the block registry."""
+        counts = self.live_counts()
+        live = sum(counts)
+        return {
+            "per_shard": counts,
+            "num_shards": self.num_shards,
+            "shard_capacity": self.shard_capacity,
+            "slots_total": self.capacity,
+            "slots_live": live,
+            "slots_free": self.capacity - live,
+            "blocks": len(self.blocks),
+            "imbalance": self.imbalance(),
+        }
+
     def _grow(self) -> None:
         self.shard_capacity *= 2
         self.alloc.grow(self.capacity)

@@ -416,3 +416,39 @@ class ShardedScorer:
                 mesh=self.mesh, kernel=self.kernel, k=self.topk))
         with tr.span("gather_pick", shards=self.num_shards, k=self.topk):
             return tr.sync(_gather_pick(v, g, mesh=self.mesh, k=self.topk))
+
+    def phase_times(self, W, alpha, mu0, kdiag, best, selected,
+                    speed: float = 1.0, *, iters: int = 10,
+                    warmup: int = 2) -> dict:
+        """Mean wall µs per phase of the phased pipeline — the capacity
+        plane's attribution probe (obs/profile.py, benchmarks/capacity.py).
+        Each phase is timed independently on materialized inputs (the
+        chain's intermediates are computed once, outside the timed region),
+        so the numbers decompose a decision without dispatch pipelining
+        hiding one phase inside another."""
+        from repro.obs.profile import time_us_blocked
+        if self._member is None:
+            raise RuntimeError("refresh() must run before phase_times()")
+        best_j = jnp.asarray(best, dtype=jnp.float32)
+        sel_j = jnp.asarray(selected)
+        speed_j = jnp.float32(speed)
+        mu, sd = jax.block_until_ready(_readout_phase(
+            W, alpha, mu0, kdiag, mesh=self.mesh, kernel=self.kernel))
+        v, g = jax.block_until_ready(_local_candidates(
+            mu, sd, best_j, self._member, self._cost, sel_j, speed_j,
+            mesh=self.mesh, kernel=self.kernel, k=self.topk))
+        return {
+            "readout_us": time_us_blocked(
+                lambda: _readout_phase(W, alpha, mu0, kdiag, mesh=self.mesh,
+                                       kernel=self.kernel),
+                iters=iters, warmup=warmup),
+            "score_us": time_us_blocked(
+                lambda: _local_candidates(
+                    mu, sd, best_j, self._member, self._cost, sel_j,
+                    speed_j, mesh=self.mesh, kernel=self.kernel,
+                    k=self.topk),
+                iters=iters, warmup=warmup),
+            "gather_us": time_us_blocked(
+                lambda: _gather_pick(v, g, mesh=self.mesh, k=self.topk),
+                iters=iters, warmup=warmup),
+        }

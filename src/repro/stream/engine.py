@@ -137,6 +137,7 @@ class StreamEngine:
         exporter=None,
         health=None,
         forensics=None,
+        accounting=None,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
@@ -191,6 +192,14 @@ class StreamEngine:
         self.health = health
         self.forensics = forensics
         self.cp.set_forensics(forensics)
+        # capacity plane (DESIGN.md §15): same discipline — gauges never
+        # feed a decision; the sample cursor + projection history ride in
+        # snapshot meta.  When both planes run, the exporter also renders
+        # the health monitor's alert counts on its scrape surface.
+        self.accounting = accounting
+        if exporter is not None and health is not None \
+                and exporter.health is None:
+            exporter.health = health
 
         # mirrors scheduler.simulate's free-device stack: initial pop order is
         # slice M-1, M-2, ...; freed slices are re-pushed on top
@@ -512,6 +521,12 @@ class StreamEngine:
         """Hook between event handling and the launch pass — the devplane
         engine evaluates its autoscale policy here.  Base: no-op."""
 
+    def _capacity_extra(self) -> dict:
+        """Extra scalar capacity gauges for the accounting plane — the
+        devplane engine reports autoscale joins/leaves and scoring passes
+        here.  Base: nothing."""
+        return {}
+
     # ---- live health plane (DESIGN.md §14) ---------------------------------
 
     def _backlog(self) -> int:
@@ -600,6 +615,11 @@ class StreamEngine:
             if self.metrics is not None:
                 self._m_events.inc()
                 self._m_queue.set(len(self._admission_queue))
+            # accounting before the health tick: a capacity sample may fire
+            # the memory watchdog, and draining in the same event keeps the
+            # alert adjacent to the sample that caused it
+            if self.accounting is not None:
+                self.accounting.tick(self._t, self.event_index, self)
             if self.health is not None:
                 self._health_tick()
             if self.exporter is not None:
@@ -615,6 +635,10 @@ class StreamEngine:
             for d, row in self.telemetry.per_device().items():
                 self.metrics.gauge(f"device.{d}.busy_fraction").set(
                     row["utilization"])
+        if self.accounting is not None:
+            # one closing sample so short runs still publish gauges (and
+            # the exporter's final record below carries them)
+            self.accounting.sample(self._t, self.event_index, self)
         if self.health is not None:
             for a in self.health.drain_new():
                 self.log.append_alert(a.to_record())
@@ -735,6 +759,8 @@ class StreamEngine:
                            if self.health is not None else None),
                 "export": (self.exporter.state_dict()
                            if self.exporter is not None else None),
+                "capacity": (self.accounting.state_dict()
+                             if self.accounting is not None else None),
             },
         }
         return arrays, meta
@@ -812,3 +838,5 @@ class StreamEngine:
             self.health.load_state(obs["health"])
         if self.exporter is not None and obs.get("export") is not None:
             self.exporter.load_state(obs["export"])
+        if self.accounting is not None and obs.get("capacity") is not None:
+            self.accounting.load_state(obs["capacity"])
