@@ -1,0 +1,159 @@
+"""Chaos plane benchmark: bounded regret degradation under injected
+failures (DESIGN.md §16).
+
+Two measurements on seeded chaos traces (hangs, poisoned losses, slice
+flakes, permanent device losses overlaid on tenant churn):
+
+* ``chaos_{twin,hardened}`` — the fully hardened DevPlaneEngine (trial
+  supervision: ``timeout_factor x predicted_seconds`` deadlines, bounded
+  retries with exponential backoff; device quarantine with probational
+  re-admission) on each chaos trace vs the SAME engine on the trace's
+  failure-free ``twin()``.  Acceptance (asserted): mean regret under
+  chaos stays within ``REGRET_BOUND x twin + REGRET_SLACK`` — the
+  bounded-degradation claim — and the hardened engine strands zero
+  devices.  Every run is deterministic (seeded traces, seeded chaos
+  overlay), so the committed numbers are exactly reproducible.
+
+* ``chaos_unsupervised`` — the same chaos traces with supervision and
+  quarantine disabled: every hang permanently strands its device, and
+  the model selected on it stays selected forever (never observed, never
+  re-queued).  The row records stranded devices and forever-unobserved
+  launches — the failure mode the supervision plane exists to close
+  (acceptance, asserted: strands at least one device where the hardened
+  twin strands none).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.devplane import DevPlaneEngine, QuarantinePolicy
+from repro.core.fleet import Fleet
+from repro.stream import chaos_trace
+
+from . import common
+from .common import emit, timed
+
+#: bounded-degradation acceptance: hardened regret <= BOUND*twin + SLACK
+REGRET_BOUND = 1.5
+REGRET_SLACK = 0.05
+
+
+def _fleet(n: int) -> Fleet:
+    return Fleet.partition_pod(total_chips=16 * n, num_slices=n)
+
+
+def _trace(sessions: int, seed: int):
+    """Tenant churn plus all four chaos modes (no mesh shrink: the scorer
+    stays fused so the suite needs no forced-device-count mesh)."""
+    return chaos_trace(
+        num_sessions=sessions, arrival_rate=1.5, seed=seed,
+        initial_slices=4, hang_rate=0.25, poison_rate=0.15,
+        flake_rate=0.10, loss_rate=0.03,
+        m_min=2, m_max=10, session_scale=10.0)
+
+
+def _engine(hardened: bool) -> DevPlaneEngine:
+    kw = {}
+    if hardened:
+        kw = dict(timeout_factor=2.5, max_retries=2, retry_backoff=1.0,
+                  quarantine=QuarantinePolicy(threshold=3, window=60.0,
+                                              duration=30.0))
+    return DevPlaneEngine(_fleet(4), "mdmt", seed=0, max_live_models=60,
+                          **kw)
+
+
+def _stranded(eng: DevPlaneEngine) -> int:
+    """Devices still holding a trial after the horizon: hung launches
+    nothing will ever complete (lost devices are retired, not stranded)."""
+    return sum(1 for s in eng.fleet.slices
+               if s.current_trial is not None and not s.retired)
+
+
+def _run(hardened: bool, trace, horizon: float):
+    eng = _engine(hardened)
+    wall, res = timed(eng.run, trace, horizon=horizon)
+    return eng, res, wall
+
+
+def bench_bounded_degradation() -> None:
+    fast = common.FAST
+    sessions, horizon, seeds = (25, 120.0, 2) if fast else (60, 300.0, 6)
+
+    rows = {"twin": [], "hardened": [], "unsupervised": []}
+    for seed in range(seeds):
+        trace = _trace(sessions, seed)
+        runs = {"twin": _run(True, trace.twin(), horizon),
+                "hardened": _run(True, trace, horizon),
+                "unsupervised": _run(False, trace, horizon)}
+        for name, (eng, res, wall) in runs.items():
+            s = res.telemetry.summary()
+            rows[name].append({
+                "regret": s["tenant_regret_mean"],
+                "served": s["sessions_served"],
+                "trials": s["trials"],
+                "timed_out": s["trials_timed_out"],
+                "retried": s["trials_retried"],
+                "quarantined": s["devices_quarantined"],
+                "rejected": s["observations_rejected"],
+                "stranded": _stranded(eng),
+                "unobserved": sum(1 for t in eng._trials if t.z is None
+                                  and t.end is None),
+                "dec_us": 1e6 * res.decision_seconds
+                          / max(res.policy_launches, 1),
+                "wall": wall,
+            })
+
+    def regret_mean(name: str):
+        vals = [r["regret"] for r in rows[name] if r["regret"] is not None]
+        return float(np.mean(vals)) if vals else None
+
+    twin_r, hard_r = regret_mean("twin"), regret_mean("hardened")
+    # the acceptance criteria the committed payload certifies
+    assert twin_r is not None and hard_r is not None
+    assert hard_r <= REGRET_BOUND * twin_r + REGRET_SLACK, (
+        f"regret degradation unbounded: {hard_r:.4f} vs twin {twin_r:.4f}")
+    assert sum(r["stranded"] for r in rows["hardened"]) == 0
+    assert sum(r["stranded"] for r in rows["unsupervised"]) > 0
+
+    for name in ("twin", "hardened", "unsupervised"):
+        rs = rows[name]
+        r_mean = regret_mean(name)
+        emit(
+            f"chaos_{name}",
+            float(np.mean([r["dec_us"] for r in rs])),
+            sessions=sessions,
+            horizon=horizon,
+            seeds=seeds,
+            regret_mean=(f"{r_mean:.6f}" if r_mean is not None else "na"),
+            regret_bound=f"{REGRET_BOUND}x+{REGRET_SLACK}",
+            regret_vs_twin=(f"{r_mean / twin_r:.3f}"
+                            if r_mean is not None and twin_r else "na"),
+            sessions_served=sum(r["served"] for r in rs),
+            trials=sum(r["trials"] for r in rs),
+            trials_timed_out=sum(r["timed_out"] for r in rs),
+            trials_retried=sum(r["retried"] for r in rs),
+            devices_quarantined=sum(r["quarantined"] for r in rs),
+            observations_rejected=sum(r["rejected"] for r in rs),
+            stranded_devices=sum(r["stranded"] for r in rs),
+            wall_s=f"{sum(r['wall'] for r in rs):.2f}",
+        )
+
+
+def main() -> None:
+    bench_bounded_degradation()
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="toy shapes (same effect as BENCH_FAST=1)")
+    if p.parse_args().smoke:
+        common.set_fast(True)
+    common.begin_suite("chaos")
+    main()
+    path = common.end_suite()
+    if path is not None:
+        import sys
+        print(f"# wrote {path}", file=sys.stderr)

@@ -30,6 +30,9 @@ Sections (default: all):
             skew / all_gather / dispatch (>= 80% attributed bar at S=8),
             per-device skew probe, accounting-sample cost (capacity,
             DESIGN.md §15; multi-shard rows need forced host devices)
+  chaos     failure-domain hardening: hardened engine vs failure-free twin
+            regret bound + unsupervised stranding baseline (chaos,
+            DESIGN.md §16)
   roofline  data-plane cost-model rooflines
 
 Each section also records its rows to a machine-readable
@@ -57,7 +60,8 @@ from . import common
 from .common import positive_int
 
 SECTIONS = ("fig2", "fig3", "fig4", "fig5", "control", "stream", "shard",
-            "devchurn", "eventlog", "dtrace", "obs", "capacity", "roofline")
+            "devchurn", "eventlog", "dtrace", "obs", "capacity", "chaos",
+            "roofline")
 
 # section -> BENCH_<suite>.json written next to the CSV (perf trajectory)
 SUITE_NAMES = {
@@ -65,7 +69,8 @@ SUITE_NAMES = {
     "control": "control_plane", "stream": "stream_churn",
     "shard": "shard_scale", "devchurn": "device_churn",
     "eventlog": "eventlog", "dtrace": "decision_trace",
-    "obs": "obs_overhead", "capacity": "capacity", "roofline": "roofline",
+    "obs": "obs_overhead", "capacity": "capacity", "chaos": "chaos",
+    "roofline": "roofline",
 }
 
 
@@ -127,6 +132,8 @@ def main() -> None:
                 from . import obs_overhead as m
             elif section == "capacity":
                 from . import capacity as m
+            elif section == "chaos":
+                from . import chaos as m
             elif section == "roofline":
                 from . import roofline as m
             else:

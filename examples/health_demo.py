@@ -24,10 +24,23 @@ Hand-builds a churn trace engineered to trip each detector class of
                    posterior block alone — the capacity plane's very first
                    sample projects (and already measures) bytes over
                    budget (severity ``page``)
+  straggler        act 3 (t=100): tenant 20's trials hang on all four
+                   devices; supervision kills each at ``timeout_factor x
+                   predicted_seconds`` — one straggler alert per device
+  retry_storm      the four killed models re-queue with backoff inside one
+                   sliding window, crossing ``retry_storm_k`` (``page``)
+  quarantine_flap  slice 0 hangs again and again: three strikes quarantine
+                   it, probation re-admits it, the next hang re-quarantines
+                   — two quarantines inside ``flap_window`` (``page``)
+  poisoned_observation  a TrialPoison makes slice 1's trial return NaN; the
+                   GP-ingest guard rejects it and alerts
 
-The run also exercises the rest of the live plane — windowed metrics
-export, per-decision forensics — and re-runs a bare twin to assert the
-observation-only guarantee.  ``--report-dir PATH`` renders the experiment
+The failure-domain detectors (DESIGN.md §16) need the hardened device
+plane, so the engine is a DevPlaneEngine with trial supervision and the
+quarantine scoreboard enabled.  The run also exercises the rest of the
+live plane — windowed metrics export, per-decision forensics — and
+re-runs a bare twin (obs planes off, supervision identical) to assert
+the observation-only guarantee.  ``--report-dir PATH`` renders the experiment
 directory (report.html shows the alert table); the committed copy lives at
 ``demo/health_report/``.  Used by CI as a smoke test:
 
@@ -43,11 +56,12 @@ import json
 import numpy as np
 
 from repro.core.fleet import Fleet
+from repro.devplane import DevPlaneEngine, QuarantinePolicy
 from repro.obs import (ALERT_KINDS, CapacityAccountant, ForensicsRecorder,
                        HealthMonitor, MetricsExporter, MetricsRegistry,
                        Tracer)
-from repro.stream import (ChurnTrace, StreamEngine, TenantArrive,
-                          TenantDepart)
+from repro.stream import (ChurnTrace, TenantArrive, TenantDepart, TrialHang,
+                          TrialPoison)
 
 SLO = {"device_utilization": 0.9}
 
@@ -81,6 +95,24 @@ def adversarial_trace() -> ChurnTrace:
             z_true=rng.uniform(0.2, 0.9, size=k)))
     for i in range(12):
         ev.append(TenantDepart(at=90.0, tenant_key=2 + i))
+
+    # act 3 (t=100): the failure-domain scenario.  tenant 20's uniform
+    # cost 10 makes every deadline land at launch + 15 (timeout_factor
+    # 1.5): hanging all four devices at t=101 produces four stragglers
+    # whose re-queues form a retry storm at t=115; slice 0 then hangs
+    # after every re-launch — three strikes quarantine it, probation
+    # re-admits it, the next hang re-quarantines: the flap.  slice 1's
+    # t=115 launch is poisoned and returns NaN at t=125.
+    m = 18
+    ev.append(TenantArrive(at=100.0, tenant_key=20, K_block=0.04 * np.eye(m),
+                           mu0=np.zeros(m), cost=np.full(m, 10.0),
+                           z_true=rng.uniform(0.2, 0.9, size=m)))
+    for sid in range(4):
+        ev.append(TrialHang(at=101.0, slice_id=sid))
+    ev.append(TrialPoison(at=116.0, slice_id=1))
+    for at in (116.0, 131.0, 156.0):
+        ev.append(TrialHang(at=at, slice_id=0))
+    ev.append(TenantDepart(at=250.0, tenant_key=20))
     return ChurnTrace(tuple(ev), name="health-demo-adversarial")
 
 
@@ -105,7 +137,16 @@ def main() -> None:
                 forensics=ForensicsRecorder())
             kw["exporter"] = MetricsExporter(kw["metrics"], window=10.0)
             kw["accounting"] = CapacityAccountant(kw["metrics"], window=10.0)
-        return StreamEngine(fleet, "mdmt", seed=0, max_live_models=20, **kw)
+        # the hardened device plane (DESIGN.md §16): the failure-domain
+        # detectors need supervision + the quarantine scoreboard — both
+        # stay identical in the bare twin (they change decisions; only
+        # the obs planes must be observation-only)
+        return DevPlaneEngine(
+            fleet, "mdmt", seed=0, max_live_models=20,
+            timeout_factor=1.5, max_retries=3, retry_backoff=1.0,
+            quarantine=QuarantinePolicy(threshold=3, window=100.0,
+                                        duration=10.0, probation_trials=2),
+            **kw)
 
     eng = make_engine()
     res = eng.run(trace)

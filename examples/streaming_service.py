@@ -17,6 +17,13 @@ attribution, and ``--capacity`` attaches the resource accountant
 (posterior bytes, shard occupancy, projected-bytes feed — DESIGN.md §15);
 any of them triggers a bare twin re-run to verify the observation-only
 guarantee: both trial sequences must be byte-identical.
+``--chaos`` runs the failure-domain hardening demo (DESIGN.md §16): a
+seeded chaos overlay (trial hangs, poisoned losses, slice flakes,
+permanent device losses) on the tenant churn, served by the hardened
+engine (trial supervision: timeout/retry/backoff; device quarantine) —
+then verifies on the trace's failure-free twin that supervision with no
+chaos is byte-identical to the bare, supervision-off engine (deadlines
+always lose the race against real completions).
 ``--report-dir PATH`` renders the per-run experiment directory
 (``PATH/<run_id>/`` with summary.json, timeline.csv, self-contained
 report.html, plus alerts.jsonl / forensics.jsonl when those planes ran).
@@ -25,6 +32,7 @@ Used by CI as a smoke test:
   PYTHONPATH=src python examples/streaming_service.py --events 50
   PYTHONPATH=src python examples/streaming_service.py --events 50 --device-churn
   PYTHONPATH=src python examples/streaming_service.py --events 50 --crash-at 40
+  PYTHONPATH=src python examples/streaming_service.py --events 50 --chaos
   PYTHONPATH=src python examples/streaming_service.py --events 60 --trace \\
       --health --forensics --capacity --report-dir obs_report
 """
@@ -39,7 +47,7 @@ import time
 
 from repro.core.fleet import Fleet
 from repro.stream import (EventLog, FaultInjector, SimulatedCrash,
-                          StreamEngine, device_churn_trace,
+                          StreamEngine, chaos_trace, device_churn_trace,
                           poisson_churn_trace, recover)
 
 
@@ -94,6 +102,12 @@ def main() -> None:
     p.add_argument("--device-churn", action="store_true",
                    help="elastic 2-speed-class fleet with device churn + "
                         "autoscale (repro.devplane)")
+    p.add_argument("--chaos", action="store_true",
+                   help="seeded chaos overlay (hangs/poisons/flakes/losses) "
+                        "served by the hardened engine: trial supervision + "
+                        "device quarantine (DESIGN.md §16); verifies "
+                        "supervision-off byte-identity on the failure-free "
+                        "twin")
     p.add_argument("--crash-at", type=int, default=None, metavar="N",
                    help="kill the engine at processed event N, recover "
                         "from the durable log + snapshots, resume, and "
@@ -124,8 +138,17 @@ def main() -> None:
     args = p.parse_args()
     slo = {"device_utilization": 0.25, "ttfo_p99": 100.0}
 
+    if args.chaos and args.device_churn:
+        p.error("--chaos and --device-churn are separate demos")
+
     sessions = max(1, args.events // 2)
-    if args.device_churn:
+    if args.chaos:
+        trace = chaos_trace(
+            num_sessions=sessions, arrival_rate=1.0, seed=args.seed,
+            initial_slices=args.slices, hang_rate=0.15, poison_rate=0.10,
+            flake_rate=0.05, loss_rate=0.02,
+            m_min=2, m_max=16, session_scale=25.0)
+    elif args.device_churn:
         from repro.devplane import (AutoscalePolicy, DevPlaneEngine,
                                     two_class_registry)
         trace = device_churn_trace(
@@ -163,6 +186,21 @@ def main() -> None:
             if "metrics" not in kw:
                 kw["metrics"] = MetricsRegistry()
             kw["accounting"] = CapacityAccountant(kw["metrics"], window=20.0)
+        if args.chaos:
+            # the hardened engine (DESIGN.md §16); the bare twin passes
+            # timeout_factor=None / quarantine=None through kw to disable
+            from repro.devplane import DevPlaneEngine, QuarantinePolicy
+            kw.setdefault("timeout_factor", 2.5)
+            kw.setdefault("max_retries", 2)
+            kw.setdefault("retry_backoff", 1.0)
+            kw.setdefault("quarantine",
+                          QuarantinePolicy(threshold=3, window=60.0,
+                                           duration=30.0))
+            fleet = Fleet.partition_pod(total_chips=32 * args.slices,
+                                        num_slices=args.slices)
+            return DevPlaneEngine(
+                fleet, args.policy, seed=args.seed,
+                max_live_models=args.max_live_models or None, **kw)
         if args.device_churn:
             reg = two_class_registry(2.0, overhead=0.5, chips=32)
             half = max(1, args.slices // 2)
@@ -232,6 +270,25 @@ def main() -> None:
               f"gp_bytes={last.get('gp_bytes')} "
               f"projected={last.get('gp_bytes_projected')} "
               f"imbalance={last.get('load_imbalance')}")
+
+    if args.chaos:
+        print(f"\nchaos: trials_timed_out={s['trials_timed_out']} "
+              f"trials_retried={s['trials_retried']} "
+              f"devices_quarantined={s['devices_quarantined']} "
+              f"observations_rejected={s['observations_rejected']}")
+        # supervision is decision-neutral when nothing fails (DESIGN.md
+        # §16): on the failure-free twin trace, the hardened engine and a
+        # bare supervision-off engine must be byte-identical — every
+        # deadline loses the race against its real completion
+        twin_trace = trace.twin()
+        hardened = make_engine().run(twin_trace)
+        bare = make_engine(timeout_factor=None, quarantine=None).run(
+            twin_trace)
+        same = ([dataclasses.astuple(t) for t in hardened.trials]
+                == [dataclasses.astuple(t) for t in bare.trials])
+        print(f"failure-free twin ({twin_trace.num_events} events): "
+              f"supervision-on == supervision-off byte-identical={same}")
+        assert same, "supervision changed a decision on a chaos-free trace"
 
     if args.trace or args.health or args.forensics or args.capacity:
         # the observation-only guarantee (DESIGN.md §13-§15): a bare twin

@@ -536,6 +536,83 @@ class ControlPlane:
         self.gp._dirty = {self._block_ids[t] for t in meta["gp_dirty"]}
         self._rebuild_mirrors()
 
+    # ---- mesh shrink / regrow (DESIGN.md §16) ------------------------------
+
+    def reshard(self, num_shards: int) -> dict[int, int]:
+        """Re-shard every resident posterior block onto a ``num_shards``
+        scoring mesh *through the checkpoint path*: snapshot the full state,
+        repartition the layout (``ShardLayout.repartition``), scatter the
+        per-slot arrays through the slot remap, and restore via
+        :meth:`load_state` — the same recipe crash recovery exercises, so
+        no hand-rolled array surgery can drift from it.  The GP is rebuilt
+        by replaying each block's local observation sequence (bit-
+        deterministic), and retired blocks' stale readout-cache entries are
+        dropped (the new mesh starts from deterministic fresh padding).
+
+        When the plane scores sharded, the scorer is rebuilt for the new
+        mesh first; at ``num_shards == 1`` it falls back to the fused
+        scorer — exact by the fused == sharded decision-equivalence
+        contract, so the fallback changes no decision.
+
+        Returns ``{old_global_model_id: new_global_model_id}`` over every
+        live block slot (empty = no-op) so the caller can remap its queues,
+        ownership maps, and pending completion events."""
+        if not self._dynamic:
+            raise RuntimeError("reshard is only supported on dynamic "
+                               "ControlPlanes (not from_problem)")
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        from repro.shardgp import ShardedScorer, ShardLayout
+        if num_shards == self._layout.num_shards:
+            return {}
+        arrays, meta = self.state_snapshot()
+        lay, remap = ShardLayout.repartition(self._layout.blocks, num_shards)
+        new_cap = lay.capacity
+        cap_N = self.membership.shape[0]
+        old = np.fromiter(remap.keys(), np.int64, len(remap))
+        new = np.fromiter(remap.values(), np.int64, len(remap))
+
+        def scatter(src, fill, dtype):
+            out = np.full(new_cap, fill, dtype=dtype)
+            if len(old):
+                out[new] = src[old]
+            return out
+
+        # padding conventions match construction: born selected, unobserved,
+        # unit cost, not live, zeroed readout cache
+        arrays["cp/selected"] = scatter(arrays["cp/selected"], True, bool)
+        arrays["cp/observed"] = scatter(arrays["cp/observed"], False, bool)
+        arrays["cp/cost"] = scatter(arrays["cp/cost"], 1.0, np.float64)
+        arrays["cp/model_live"] = scatter(arrays["cp/model_live"], False,
+                                          bool)
+        arrays["cp/gp_mu"] = scatter(arrays["cp/gp_mu"], 0.0, np.float32)
+        arrays["cp/gp_var"] = scatter(arrays["cp/gp_var"], 0.0, np.float32)
+        mem = np.zeros((cap_N, new_cap), dtype=bool)
+        if len(old):
+            mem[:, new] = arrays["cp/membership"][:, old]
+        arrays["cp/membership"] = mem
+        # preserve registry insertion order — load_state rebuilds the GP in
+        # this order, and the uninterrupted-vs-restart equivalence needs it
+        meta["layout"] = {
+            "num_shards": lay.num_shards,
+            "shard_capacity": lay.shard_capacity,
+            "alloc_capacity": lay.alloc.capacity,
+            "free": [[s, l] for s, l in lay.alloc._free],
+            "blocks": {str(k): [pl.start, pl.length]
+                       for k, pl in lay.blocks.items()},
+        }
+        meta["gp_n"] = new_cap
+        if self.scorer == "sharded":
+            if num_shards == 1:
+                self.scorer = "fused"
+                self._sharded = None
+            elif num_shards != self._sharded.num_shards:
+                self._sharded = ShardedScorer(
+                    num_shards, topk=self._sharded.topk,
+                    kernel=self._sharded.kernel)
+        self.load_state(arrays, meta)
+        return remap
+
     # ---- observability (DESIGN.md §13) -------------------------------------
 
     def set_tracer(self, tracer) -> None:
@@ -642,7 +719,17 @@ class ControlPlane:
     def record_observation(self, model: int, z: float) -> bool:
         """Fold one observation; returns True when it improved at least one
         member tenant's incumbent (the health plane's regret-stall signal —
-        callers that predate the health plane ignore the return)."""
+        callers that predate the health plane ignore the return).
+
+        Non-finite ``z`` is rejected loudly (DESIGN.md §16): a NaN here
+        corrupts the incremental Cholesky and every later decision.  The
+        engines check upstream and route poisoned losses through
+        ``record_failure`` instead; this raise is the hard boundary for
+        callers that don't."""
+        if not np.isfinite(z):
+            raise ValueError(f"non-finite observation {z!r} for model "
+                             f"{model}; poisoned losses must not reach the "
+                             f"GP (use record_failure)")
         self.observed[model] = True
         with self.tracer.span("gp_fold", model=model):
             self.gp.observe(model, z)

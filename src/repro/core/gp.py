@@ -146,6 +146,12 @@ class IncrementalGP:
         """Condition on z(model idx) = z_val.  O(n^2) fixed-shape jitted step."""
         if idx in self._z:
             raise ValueError(f"model {idx} already observed")
+        import math
+        if not math.isfinite(z_val):
+            # poisoned-observation guard (DESIGN.md §16): a NaN/±inf fold
+            # would silently corrupt every later posterior readout
+            raise ValueError(f"non-finite observation {z_val!r} for "
+                             f"model {idx}")
         self._W, self._alpha, self._diag_acc, self.last_d2 = _append_step(
             self._W,
             self._alpha,
@@ -339,6 +345,12 @@ class BlockIncrementalGP:
         return blocks
 
     def observe(self, idx: int, z_val: float) -> None:
+        import math
+        if not math.isfinite(z_val):
+            # poisoned-observation guard at the block boundary too: callers
+            # that bypass ControlPlane.record_observation get the same wall
+            raise ValueError(f"non-finite observation {z_val!r} for "
+                             f"model {idx}")
         if idx not in self._local:
             raise KeyError(f"model {idx} belongs to no live block")
         bi, li = self._local[idx]

@@ -15,8 +15,11 @@ preemptions).  This package makes both first-class:
                 dense or sharded) + a greedy auction, provably identical to
                 k sequential argmaxes on homogeneous fleets
   autoscale.py  queue-depth-driven fleet sizing (join/retire at event times)
+  quarantine.py per-device strike scoreboard: quarantine-on-threshold,
+                probational re-admission, flap detection (DESIGN.md §16)
   engine.py     DevPlaneEngine: StreamEngine + DeviceJoin/Leave/Preempt
-                handling, 2-D costs, batched assignment, autoscale
+                handling, 2-D costs, batched assignment, autoscale,
+                device quarantine
 
 Equivalence ladder (each rung tested): ``scheduler.simulate`` ==
 churn-free ``StreamEngine`` == device-churn-free ``DevPlaneEngine``; and
@@ -26,6 +29,7 @@ batched == sequential assignment on homogeneous fleets.
 from .assign import greedy_assign  # noqa: F401
 from .autoscale import AutoscalePolicy  # noqa: F401
 from .engine import DevPlaneEngine  # noqa: F401
+from .quarantine import QuarantineBoard, QuarantinePolicy  # noqa: F401
 from .registry import (  # noqa: F401
     BASE_CLASS,
     REFERENCE_CHIPS,

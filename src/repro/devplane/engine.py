@@ -45,6 +45,7 @@ from repro.stream.workload import DeviceJoin, DeviceLeave, DevicePreempt
 
 from .assign import greedy_assign
 from .autoscale import AutoscalePolicy
+from .quarantine import QuarantineBoard, QuarantinePolicy
 from .registry import DeviceClassRegistry
 
 ASSIGN_MODES = ("batched", "sequential")
@@ -63,6 +64,11 @@ class DevPlaneEngine(StreamEngine):
     * ``speed_oblivious`` — score as if every device were the reference
       class (durations stay real); the regret baseline the device-aware
       plane is measured against.
+    * ``quarantine`` — a :class:`QuarantinePolicy`, or None.  Activates
+      the per-device strike scoreboard (DESIGN.md §16): devices that keep
+      timing out or failing are pulled from the launchable pool, re-
+      admitted on probation, and subtracted from the device count the
+      autoscale controller sees (sick capacity triggers scale-up).
     """
 
     def __init__(self, fleet, policy: str = "mdmt", *,
@@ -70,6 +76,7 @@ class DevPlaneEngine(StreamEngine):
                  assign: str = "batched",
                  autoscale: AutoscalePolicy | None = None,
                  speed_oblivious: bool = False,
+                 quarantine: QuarantinePolicy | None = None,
                  **kw):
         super().__init__(fleet, policy, **kw)
         if assign not in ASSIGN_MODES:
@@ -90,6 +97,8 @@ class DevPlaneEngine(StreamEngine):
             if s.cls not in self.registry:
                 raise ValueError(f"slice {s.slice_id} has unregistered "
                                  f"device class {s.cls!r}")
+        self.quarantine = (QuarantineBoard(quarantine)
+                           if quarantine is not None else None)
         self._autoscale_joins = 0
         self._autoscale_leaves = 0
         self._scoring_passes = 0
@@ -121,6 +130,8 @@ class DevPlaneEngine(StreamEngine):
             self._handle_dev_leave(*payload)
         elif kind == "dev_preempt":
             self._handle_dev_preempt(*payload)
+        elif kind == "probation":
+            self._handle_probation(*payload)
         else:
             super()._dispatch_extra(kind, payload)
 
@@ -153,6 +164,8 @@ class DevPlaneEngine(StreamEngine):
             self._kill_trial(killed)
         elif slice_id in self._free:
             self._free.remove(slice_id)
+        if self.quarantine is not None:
+            self.quarantine.retire(slice_id)
         self.telemetry.on_device_leave(self._t, slice_id)
 
     def _handle_dev_preempt(self, slice_id: int) -> None:
@@ -165,8 +178,63 @@ class DevPlaneEngine(StreamEngine):
         if killed is not None:
             self._kill_trial(killed, preempted=True)
             # the slice survives the eviction: immediately schedulable
-            if slice_id not in self._free:
+            # (unless quarantined — the scoreboard outranks the eviction)
+            if slice_id not in self._free and not self._is_quarantined(
+                    slice_id):
                 self._free.append(slice_id)
+
+    # ---- device quarantine (DESIGN.md §16) ---------------------------------
+
+    def _device_strike(self, device: int, *, reason: str) -> bool:
+        """Feed the strike scoreboard; True = device newly quarantined
+        (the supervision hooks then keep it out of the free pool)."""
+        board = self.quarantine
+        if board is None or device >= len(self.fleet.slices):
+            return False
+        s = self.fleet.slices[device]
+        if s.retired:
+            return False
+        newly = board.strike(device, self._t)
+        if newly:
+            if device in self._free:
+                self._free.remove(device)
+            self._push(self._t + board.policy.duration,
+                       "probation", (device,))
+            count = board.quarantine_count(device)
+            self.telemetry.on_quarantine(self._t, device)
+            if self.health is not None:
+                self.health.on_quarantine(self._t, self.event_index,
+                                          device, count=count)
+            if self.metrics is not None:
+                self.metrics.counter("engine.devices_quarantined",
+                                     labels={"cls": s.cls}).inc()
+            if self.forensics is not None:
+                self.forensics.on_incident(
+                    kind="device_quarantine", device=int(device),
+                    reason=reason, count=int(count))
+        return board.is_quarantined(device)
+
+    def _device_ok(self, device: int) -> None:
+        if self.quarantine is not None:
+            self.quarantine.on_success(device)
+
+    def _is_quarantined(self, device: int) -> bool:
+        return (self.quarantine is not None
+                and self.quarantine.is_quarantined(device))
+
+    def _handle_probation(self, device: int) -> None:
+        board = self.quarantine
+        if board is None or board.state(device) != "quarantined":
+            return                     # retired / already re-quarantined
+        board.begin_probation(device)
+        if device >= len(self.fleet.slices):
+            return
+        s = self.fleet.slices[device]
+        # dual-gate with recover: a device that failed *while* quarantined
+        # re-enters only via whichever of (recover, probation) fires last
+        if (s.healthy and not s.retired and s.current_trial is None
+                and device not in self._free):
+            self._free.append(device)
 
     # ---- snapshot / restore (event sourcing, DESIGN.md §12) ----------------
 
@@ -174,7 +242,7 @@ class DevPlaneEngine(StreamEngine):
         if kind == "dev_join":
             ev = payload[0]
             return [ev.at, ev.chips, ev.speed, ev.cls]
-        if kind in ("dev_leave", "dev_preempt"):
+        if kind in ("dev_leave", "dev_preempt", "probation"):
             return list(payload)
         return super()._encode_payload(kind, payload)
 
@@ -182,7 +250,7 @@ class DevPlaneEngine(StreamEngine):
         if kind == "dev_join":
             at, chips, speed, cls = data
             return (DeviceJoin(at=at, chips=chips, speed=speed, cls=cls),)
-        if kind in ("dev_leave", "dev_preempt"):
+        if kind in ("dev_leave", "dev_preempt", "probation"):
             return tuple(data)
         return super()._decode_payload(kind, data)
 
@@ -193,6 +261,8 @@ class DevPlaneEngine(StreamEngine):
             "autoscale_joins": self._autoscale_joins,
             "autoscale_leaves": self._autoscale_leaves,
             "scoring_passes": self._scoring_passes,
+            "quarantine": (self.quarantine.state_dict()
+                           if self.quarantine is not None else None),
         }
 
     def _restore_extra(self, extra: dict) -> None:
@@ -203,6 +273,8 @@ class DevPlaneEngine(StreamEngine):
         self._autoscale_joins = extra["autoscale_joins"]
         self._autoscale_leaves = extra["autoscale_leaves"]
         self._scoring_passes = extra["scoring_passes"]
+        if self.quarantine is not None and extra.get("quarantine"):
+            self.quarantine.load_state(extra["quarantine"])
 
     def _capacity_extra(self) -> dict:
         """Elastic-fleet counters for the capacity plane
@@ -211,6 +283,8 @@ class DevPlaneEngine(StreamEngine):
             "autoscale_joins": self._autoscale_joins,
             "autoscale_leaves": self._autoscale_leaves,
             "scoring_passes": self._scoring_passes,
+            "devices_quarantined": (self.quarantine.quarantined_now()
+                                    if self.quarantine is not None else 0),
         }
 
     # ---- autoscale ---------------------------------------------------------
@@ -219,8 +293,14 @@ class DevPlaneEngine(StreamEngine):
         if self.autoscale is None or not self.autoscale.ready(self._t):
             return                     # skip the O(capacity) backlog scan
         backlog = self._backlog()
+        # quarantined devices are not serving capacity: report only the
+        # in-service count so a sick fleet looks small and scales up
+        quarantined = (self.quarantine.quarantined_now()
+                       if self.quarantine is not None else 0)
+        in_service = max(self.fleet.num_devices - quarantined,
+                         1 if self.fleet.num_devices else 0)
         action = self.autoscale.decide(
-            self._t, backlog=backlog, num_devices=self.fleet.num_devices,
+            self._t, backlog=backlog, num_devices=in_service,
             num_free=len(self._free))
         if action == "join":
             self._join_device(self.autoscale.join_class)

@@ -117,6 +117,26 @@ class ForensicsRecorder:
             self._fh.flush()
         return rec
 
+    def on_incident(self, *, kind: str, **detail) -> dict:
+        """Record one failure-domain incident (DESIGN.md §16): a trial
+        timeout, a poisoned observation, a device quarantine, a mesh
+        shrink.  Incident records share the decision stream (and its
+        (event_index, seq) keying) but carry ``"record": "incident"`` so
+        report tooling can split them; every float is sanitized for the
+        allow_nan=False stream."""
+        clean = {k: (_f(v) if isinstance(v, float) else v)
+                 for k, v in detail.items()}
+        rec = {"schema_version": FORENSICS_SCHEMA_VERSION,
+               "record": "incident",
+               "t": self._t, "event_index": self._event_index,
+               "seq": self._seq, "kind": kind, "detail": clean}
+        self._seq += 1
+        self.records.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, allow_nan=False) + "\n")
+            self._fh.flush()
+        return rec
+
     def close(self) -> None:
         if self._fh is not None:
             self._fh.close()

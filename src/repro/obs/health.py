@@ -43,6 +43,23 @@ Detectors:
   outrunning the memory budget and will blow it *before* it actually
   does.  Severity ``page`` once current bytes already exceed the budget;
   re-arms when the projection drops back under 80% of it.
+
+Failure-domain detectors (DESIGN.md §16), fed by trial supervision and
+the device quarantine scoreboard:
+
+* **straggler** — trial supervision killed a trial at its deadline; the
+  device is producing overruns.  Deduped to one alert per device per
+  sim-time window.
+* **retry_storm** — ``retry_storm_k`` or more backoff re-queues landed
+  inside one sliding ``window``: the fleet is thrashing on retries
+  instead of making progress (severity ``page``); re-arms once the
+  windowed count drains to half the threshold.
+* **quarantine_flap** — the same device got quarantined twice within
+  ``flap_window`` sim-seconds: probation keeps re-admitting a device
+  that keeps failing (severity ``page``), deduped per device per window.
+* **poisoned_observation** — the GP-ingest guard rejected a non-finite
+  loss (every occurrence alerts: poisoned losses are rare and each one
+  is a diverged training run someone should look at).
 """
 
 from __future__ import annotations
@@ -53,7 +70,9 @@ HEALTH_SCHEMA_VERSION = 1
 
 #: alert kinds, in severity-report order
 ALERT_KINDS = ("slo_burn", "regret_stall", "queue_runaway",
-               "class_starvation", "gp_conditioning", "memory_runaway")
+               "class_starvation", "gp_conditioning", "memory_runaway",
+               "straggler", "retry_storm", "quarantine_flap",
+               "poisoned_observation")
 
 
 @dataclass(frozen=True)
@@ -99,7 +118,9 @@ class HealthMonitor:
                  stall_k: int = 12, queue_limit: int = 16,
                  starvation_window: float = 30.0,
                  conditioning_scale: float = 10.0,
-                 memory_budget_bytes: float | None = None):
+                 memory_budget_bytes: float | None = None,
+                 retry_storm_k: int = 4,
+                 flap_window: float | None = None):
         if window <= 0:
             raise ValueError("window must be positive")
         self.slo = dict(slo or {})
@@ -112,6 +133,9 @@ class HealthMonitor:
         self.conditioning_scale = float(conditioning_scale)
         self.memory_budget_bytes = (None if memory_budget_bytes is None
                                     else float(memory_budget_bytes))
+        self.retry_storm_k = int(retry_storm_k)
+        self.flap_window = (10.0 * self.window if flap_window is None
+                            else float(flap_window))
 
         self.alerts: list[Alert] = []
         self._drained = 0
@@ -127,6 +151,12 @@ class HealthMonitor:
         self._class_armed: dict[str, bool] = {}
         self._cond_last_window: dict[str, int] = {}  # tenant -> window
         self._mem_armed = True
+        # failure-domain detector state (DESIGN.md §16)
+        self._straggler_last_window: dict[str, int] = {}  # device -> window
+        self._retry_times: list[float] = []          # retries inside window
+        self._retry_armed = True
+        self._flap_times: dict[str, list[float]] = {}   # device -> quarantines
+        self._flap_last_window: dict[str, int] = {}
 
     # -- emission ---------------------------------------------------------
 
@@ -173,6 +203,60 @@ class HealthMonitor:
                     self._alert(t, event_index, "gp_conditioning", "warn",
                                 key, model=int(model), d2=float(d2),
                                 jitter=float(jitter))
+
+    # -- failure-domain feeds (DESIGN.md §16) ------------------------------
+
+    def on_timeout(self, t: float, event_index: int, device, tenant,
+                   overrun: float = 0.0) -> None:
+        """Trial supervision killed a straggler on ``device`` — one
+        ``straggler`` alert per device per sim-time window."""
+        key = str(device)
+        w = int(t // self.window)
+        if self._straggler_last_window.get(key) != w:
+            self._straggler_last_window[key] = w
+            self._alert(t, event_index, "straggler", "warn", key,
+                        tenant=str(tenant), overrun_seconds=float(overrun))
+
+    def on_retry(self, t: float, event_index: int, tenant, model: int,
+                 attempt: int) -> None:
+        """A backoff re-queue landed; ``retry_storm_k`` of them inside one
+        sliding window pages (the fleet is thrashing, not progressing)."""
+        self._retry_times.append(float(t))
+        self._retry_times = [x for x in self._retry_times
+                             if t - x <= self.window]
+        n = len(self._retry_times)
+        if n >= self.retry_storm_k and self._retry_armed:
+            self._retry_armed = False
+            self._alert(t, event_index, "retry_storm", "page", "fleet",
+                        retries_in_window=int(n), window=self.window,
+                        limit=self.retry_storm_k)
+        elif n <= self.retry_storm_k // 2:
+            self._retry_armed = True
+
+    def on_quarantine(self, t: float, event_index: int, device,
+                      count: int = 1) -> None:
+        """The scoreboard quarantined ``device``; a second quarantine of the
+        same device within ``flap_window`` means probation keeps re-admitting
+        a bad device — the flap alert, deduped per device per window."""
+        key = str(device)
+        times = self._flap_times.setdefault(key, [])
+        times.append(float(t))
+        self._flap_times[key] = times = [x for x in times
+                                         if t - x <= self.flap_window]
+        if len(times) >= 2:
+            w = int(t // self.window)
+            if self._flap_last_window.get(key) != w:
+                self._flap_last_window[key] = w
+                self._alert(t, event_index, "quarantine_flap", "page", key,
+                            quarantines_in_window=len(times),
+                            flap_window=self.flap_window,
+                            total_quarantines=int(count))
+
+    def on_poisoned(self, t: float, event_index: int, tenant,
+                    model: int) -> None:
+        """The GP-ingest guard rejected a non-finite loss."""
+        self._alert(t, event_index, "poisoned_observation", "warn",
+                    str(tenant), model=int(model))
 
     def on_capacity(self, t: float, event_index: int, *, bytes_now: float,
                     projected_bytes: float) -> None:
@@ -268,6 +352,11 @@ class HealthMonitor:
             "class_armed": dict(self._class_armed),
             "cond_last_window": dict(self._cond_last_window),
             "mem_armed": self._mem_armed,
+            "straggler_last_window": dict(self._straggler_last_window),
+            "retry_times": list(self._retry_times),
+            "retry_armed": self._retry_armed,
+            "flap_times": {k: list(v) for k, v in self._flap_times.items()},
+            "flap_last_window": dict(self._flap_last_window),
         }
 
     def load_state(self, state: dict) -> None:
@@ -288,6 +377,16 @@ class HealthMonitor:
                                   in state["cond_last_window"].items()}
         # tolerant of pre-capacity-plane snapshots (no mem_armed key)
         self._mem_armed = bool(state.get("mem_armed", True))
+        # tolerant of pre-supervision snapshots (no failure-domain keys)
+        self._straggler_last_window = {
+            k: int(v) for k, v
+            in state.get("straggler_last_window", {}).items()}
+        self._retry_times = [float(x) for x in state.get("retry_times", [])]
+        self._retry_armed = bool(state.get("retry_armed", True))
+        self._flap_times = {k: [float(x) for x in v] for k, v
+                            in state.get("flap_times", {}).items()}
+        self._flap_last_window = {k: int(v) for k, v
+                                  in state.get("flap_last_window", {}).items()}
         # alerts are NOT restored: the durable prefix lives in the event
         # log's alerts.jsonl; a resumed run re-emits only its suffix
         self.alerts = []

@@ -192,6 +192,28 @@ class ShardLayout:
                     return start
             self._grow()
 
+    @classmethod
+    def repartition(cls, blocks: dict[int, BlockPlacement],
+                    num_shards: int) -> tuple["ShardLayout", dict[int, int]]:
+        """Re-place an existing block registry onto a fresh ``num_shards``
+        layout — the mesh shrink/regrow path (DESIGN.md §16).
+
+        Blocks are placed in registry insertion order through the normal
+        :meth:`place` policy (least-loaded span first, doubling growth), so
+        the result is exactly the layout a restart on the new mesh would
+        build by admitting the same tenants in the same order.  Returns the
+        new layout plus the slot remap ``{old_global_slot: new_global_slot}``
+        covering every slot of every block."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        lay = cls(num_shards=num_shards, shard_capacity=1)
+        remap: dict[int, int] = {}
+        for key, pl in blocks.items():
+            start = lay.place(key, pl.length)
+            for off in range(pl.length):
+                remap[pl.start + off] = start + off
+        return lay, remap
+
     def release(self, key: int) -> BlockPlacement:
         """Free a block's slots back to the allocator."""
         pl = self.blocks.pop(key)

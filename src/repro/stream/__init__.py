@@ -39,13 +39,18 @@ from .eventlog import (  # noqa: F401
 )
 from .telemetry import TelemetrySink  # noqa: F401
 from .workload import (  # noqa: F401
+    ChaosTrace,
     ChurnTrace,
     DeviceJoin,
     DeviceLeave,
     DevicePreempt,
+    MeshShrink,
     SliceFail,
     TenantArrive,
     TenantDepart,
+    TrialHang,
+    TrialPoison,
+    chaos_trace,
     device_churn_trace,
     poisson_churn_trace,
     trace_from_problem,

@@ -57,7 +57,8 @@ from repro.obs import NULL_TRACER
 
 from .eventlog import EventLog, FaultInjector
 from .telemetry import TelemetrySink
-from .workload import ChurnTrace, SliceFail, TenantArrive, TenantDepart
+from .workload import (ChurnTrace, MeshShrink, SliceFail, TenantArrive,
+                       TenantDepart, TrialHang, TrialPoison)
 
 
 @dataclass(frozen=True)
@@ -138,16 +139,34 @@ class StreamEngine:
         health=None,
         forensics=None,
         accounting=None,
+        timeout_factor: float | None = None,
+        max_retries: int = 2,
+        retry_backoff: float = 1.0,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if launch_order not in self.LAUNCH_ORDERS:
             raise ValueError(f"launch_order must be one of "
                              f"{self.LAUNCH_ORDERS}, got {launch_order!r}")
+        if timeout_factor is not None and timeout_factor <= 1.0:
+            raise ValueError("timeout_factor must exceed 1.0 (the deadline "
+                             f"is k x predicted seconds), got {timeout_factor}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff <= 0:
+            raise ValueError(f"retry_backoff must be > 0, got {retry_backoff}")
         self.fleet = fleet
         self.policy = policy
         self.launch_order = launch_order
         self.warm_start = warm_start
+        # trial supervision (DESIGN.md §16): with timeout_factor set, every
+        # launch schedules a deadline at t + timeout_factor * predicted
+        # duration; a trial that misses it is killed, its model re-queued
+        # with exponential backoff up to max_retries attempts.  None keeps
+        # the unsupervised engine byte-identical (no timeout events at all).
+        self.timeout_factor = timeout_factor
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
         self.max_live_models = max_live_models
         self.compact_every = compact_every
         self.compact_imbalance = compact_imbalance
@@ -216,6 +235,13 @@ class StreamEngine:
         self._owner_of_model: dict[int, _TenantRuntime] = {}
         self._trials: list[StreamTrial] = []
         self._cancelled: set[int] = set()
+        # failure-domain state (DESIGN.md §16): trial indices doomed to hang
+        # (never finish) or return a poisoned loss, and per-model retry
+        # budgets keyed (tenant_key, local_model) — stable across slot
+        # recycling and mesh re-sharding, unlike global model ids
+        self._hung: set[int] = set()
+        self._poisoned: set[int] = set()
+        self._retry_attempts: dict[tuple[int, int], int] = {}
         self._t = 0.0
         self._decisions = 0
         self._decision_seconds = 0.0
@@ -335,6 +361,11 @@ class StreamEngine:
     def _handle_finish(self, device: int, model: int, ti: int) -> None:
         if ti in self._cancelled:
             return
+        if ti in self._hung:
+            # the trial hung: its completion never materializes and the
+            # device stays busy — without supervision, stranded forever
+            # (the failure mode the chaos benchmark's baseline demonstrates)
+            return
         t = self._trials[ti]
         # resolve the owner by tenant key, NOT by model id: with slot reuse
         # the id may already belong to a newly admitted tenant while this
@@ -345,21 +376,42 @@ class StreamEngine:
                 self._t, tr.key, t.end - t.start, device=device)
         else:
             z = float(tr.arrive.z_true[t.local_model])
-            self._trials[ti] = StreamTrial(
-                t.model, t.tenant_key, t.local_model, t.user_hint,
-                t.device, t.start, t.end, z)
-            improved = self.cp.record_observation(model, z)
-            if self.health is not None:
-                # d2 stays device-resident until a monitor asks for it —
-                # the sync is paid only on the health-enabled path
-                d2 = self.cp.gp.last_d2
-                self.health.on_observation(
-                    self._t, self.event_index, tr.key, improved,
-                    d2=None if d2 is None else float(d2),
-                    jitter=self.cp._jitter, model=model)
-            self.telemetry.on_observation(
-                self._t, tr.key, model, z, t.end - t.start, device=device)
+            if ti in self._poisoned:
+                self._poisoned.discard(ti)
+                z = float("nan")
+            if not np.isfinite(z):
+                # poisoned-observation guard: a non-finite loss never
+                # reaches the GP (it would corrupt the Cholesky).  The
+                # model returns to the unselected pool like a failure.
+                self.cp.record_failure(model)
+                self.telemetry.on_poisoned_observation(
+                    self._t, tr.key, model, t.end - t.start, device=device)
+                if self.health is not None:
+                    self.health.on_poisoned(self._t, self.event_index,
+                                            tr.key, model)
+                if self.metrics is not None:
+                    self.metrics.counter("engine.observations_rejected").inc()
+                if self.forensics is not None:
+                    self.forensics.on_incident(
+                        kind="poisoned_observation", tenant=tr.key,
+                        model=model, device=device)
+            else:
+                self._trials[ti] = StreamTrial(
+                    t.model, t.tenant_key, t.local_model, t.user_hint,
+                    t.device, t.start, t.end, z)
+                improved = self.cp.record_observation(model, z)
+                if self.health is not None:
+                    # d2 stays device-resident until a monitor asks for it —
+                    # the sync is paid only on the health-enabled path
+                    d2 = self.cp.gp.last_d2
+                    self.health.on_observation(
+                        self._t, self.event_index, tr.key, improved,
+                        d2=None if d2 is None else float(d2),
+                        jitter=self.cp._jitter, model=model)
+                self.telemetry.on_observation(
+                    self._t, tr.key, model, z, t.end - t.start, device=device)
         self.fleet.slices[device].current_trial = None
+        self._device_ok(device)
         self._free.append(device)
 
     def _kill_trial(self, killed_ti: int, *, preempted: bool = False) -> None:
@@ -367,6 +419,8 @@ class StreamEngine:
         failure, device leave, preemption): cancel its pending completion,
         rewrite the record as unobserved, and return the model to
         L \\ L(t) — it was never observed, the paper's failure rule."""
+        self._hung.discard(killed_ti)
+        self._poisoned.discard(killed_ti)
         self._cancelled.add(killed_ti)
         t = self._trials[killed_ti]
         self._trials[killed_ti] = StreamTrial(
@@ -394,6 +448,7 @@ class StreamEngine:
             self._kill_trial(killed_ti)
         elif slice_id in self._free:
             self._free.remove(slice_id)
+        self._device_strike(slice_id, reason="slice_fail")
         self._push(self._t + downtime, "recover", (slice_id,))
 
     def _handle_recover(self, slice_id: int) -> None:
@@ -401,8 +456,161 @@ class StreamEngine:
         if s.retired:
             return                       # left the fleet while down
         self.fleet.recover(slice_id)
-        if s.current_trial is None and slice_id not in self._free:
+        if (s.current_trial is None and slice_id not in self._free
+                and not self._is_quarantined(slice_id)):
             self._free.append(slice_id)
+
+    # ---- trial supervision + failure-domain handlers (DESIGN.md §16) -------
+
+    def _handle_timeout(self, device: int, model: int, ti: int) -> None:
+        """The deadline for trial ``ti`` fired.  A completed or cancelled
+        trial makes this a logged no-op; a still-running one is a straggler:
+        kill it, free the device (unless quarantine holds it), and re-queue
+        the model with exponential backoff if retry budget remains.  The
+        model stays SELECTED through the backoff window — the policy cannot
+        re-pick it early, and the in-flight compaction pin keeps its block
+        unmoved while the retry event holds its global id.  A model that
+        exhausts its budget is abandoned (permanently selected, never
+        observed) — deliberately NOT returned to the pool, which would
+        re-pick and re-time-out it forever."""
+        s = self.fleet.slices[device]
+        if ti in self._cancelled or s.current_trial != ti:
+            return                       # completed / killed before deadline
+        self._hung.discard(ti)
+        self._poisoned.discard(ti)
+        self._cancelled.add(ti)
+        t = self._trials[ti]
+        self._trials[ti] = StreamTrial(
+            t.model, t.tenant_key, t.local_model, t.user_hint,
+            t.device, t.start, self._t, None)
+        owner = self._tenants[t.tenant_key]
+        retrying = False
+        rk = (t.tenant_key, t.local_model)
+        attempt = self._retry_attempts.get(rk, 0)
+        if not owner.departed and attempt < self.max_retries:
+            self._retry_attempts[rk] = attempt + 1
+            self._push(self._t + self.retry_backoff * (2.0 ** attempt),
+                       "retry", (t.tenant_key, t.model, attempt + 1))
+            retrying = True
+        s.current_trial = None
+        s.busy_until = self._t
+        quarantined = self._device_strike(device, reason="timeout")
+        if not quarantined and device not in self._free:
+            self._free.append(device)
+        self.telemetry.on_trial_timeout(
+            self._t, t.tenant_key, t.model, self._t - t.start,
+            device=device, retrying=retrying or owner.departed)
+        if self.health is not None:
+            self.health.on_timeout(self._t, self.event_index, device,
+                                   t.tenant_key,
+                                   overrun=self._t - t.start)
+        if self.metrics is not None:
+            self.metrics.counter("engine.trials_timed_out",
+                                 labels={"cls": s.cls}).inc()
+        if self.forensics is not None:
+            self.forensics.on_incident(
+                kind="trial_timeout", tenant=t.tenant_key, model=t.model,
+                device=device, attempt=attempt, retrying=retrying)
+
+    def _handle_retry(self, key: int, model: int, attempt: int) -> None:
+        """Backoff expired: deselect the model and re-queue it through the
+        pending launch path (the same staleness-guarded queue warm starts
+        use), so the next launch pass relaunches it deterministically."""
+        owner = self._tenants.get(key)
+        if (owner is None or owner.departed
+                or self._owner_of_model.get(model) is not owner):
+            return                       # tenant left / slot recycled meanwhile
+        self.cp.record_failure(model)
+        self._pending.append((key, model))
+        self.telemetry.on_trial_retry(self._t, key, model, attempt)
+        if self.health is not None:
+            self.health.on_retry(self._t, self.event_index, key, model,
+                                 attempt)
+        if self.metrics is not None:
+            self.metrics.counter("engine.trials_retried").inc()
+
+    def _handle_hang(self, slice_id: int) -> None:
+        """Chaos event: the trial currently on ``slice_id`` will never
+        complete — mark it so its finish event becomes a no-op."""
+        if slice_id >= len(self.fleet.slices):
+            return
+        s = self.fleet.slices[slice_id]
+        ti = s.current_trial
+        if (not s.healthy or s.retired or ti is None
+                or ti in self._cancelled):
+            return                       # nothing running to hang
+        self._hung.add(ti)
+
+    def _handle_poison(self, slice_id: int) -> None:
+        """Chaos event: the trial currently on ``slice_id`` completes on
+        schedule but returns NaN — mark it for the ingest guard."""
+        if slice_id >= len(self.fleet.slices):
+            return
+        s = self.fleet.slices[slice_id]
+        ti = s.current_trial
+        if (not s.healthy or s.retired or ti is None
+                or ti in self._cancelled):
+            return
+        self._poisoned.add(ti)
+
+    def _handle_mesh_shrink(self, num_shards: int) -> None:
+        """The scoring mesh lost devices: re-shard every resident posterior
+        block onto a ``num_shards`` mesh through the control plane's
+        checkpoint path, then remap every engine-side structure holding
+        global model ids (the compaction discipline, applied to the whole
+        resident set)."""
+        with self.tracer.span("mesh_shrink", num_shards=num_shards):
+            remap = self.cp.reshard(num_shards)
+        if not remap:
+            return
+        for tr in self._tenants.values():
+            if tr.tenant_id is not None and not tr.departed:
+                tr.model_start = remap.get(tr.model_start, tr.model_start)
+        self._owner_of_model = {remap.get(g, g): tr
+                                for g, tr in self._owner_of_model.items()}
+        self._pending = [(key, remap.get(g, g)) for key, g in self._pending]
+        # in-flight trial records and their pending finish/timeout/retry
+        # heap payloads carry global ids too.  Departed owners' ids are
+        # absent from the remap (their blocks are already released) — their
+        # handlers never dereference the model id, so passthrough is safe.
+        for s in self.fleet.slices:
+            ti = s.current_trial
+            if ti is not None and ti not in self._cancelled:
+                t = self._trials[ti]
+                self._trials[ti] = StreamTrial(
+                    remap.get(t.model, t.model), t.tenant_key, t.local_model,
+                    t.user_hint, t.device, t.start, t.end, t.z)
+        heap = []
+        for t, seq, kind, payload in self._heap:
+            if kind in ("finish", "timeout"):
+                d, g, ti = payload
+                payload = (d, remap.get(g, g), ti)
+            elif kind == "retry":
+                k, g, a = payload
+                payload = (k, remap.get(g, g), a)
+            heap.append((t, seq, kind, payload))
+        # same (t, seq) arrangement => still a valid heap
+        self._heap = heap
+        if self.metrics is not None:
+            self.metrics.counter("engine.mesh_shrinks").inc()
+        if self.forensics is not None:
+            self.forensics.on_incident(kind="mesh_shrink",
+                                       num_shards=num_shards,
+                                       slots_remapped=len(remap))
+
+    # ---- device quarantine hooks (devplane overrides; DESIGN.md §16) -------
+
+    def _device_strike(self, device: int, *, reason: str) -> bool:
+        """Record a failure/timeout strike against ``device``.  Returns True
+        when the device is (now) quarantined and must be kept out of the
+        free list.  Base engine: no scoreboard, never quarantines."""
+        return False
+
+    def _device_ok(self, device: int) -> None:
+        """Record a clean completion on ``device`` (probation credit)."""
+
+    def _is_quarantined(self, device: int) -> bool:
+        return False
 
     # ---- the launch loop (mirrors scheduler.simulate.try_launch) -----------
 
@@ -441,6 +649,12 @@ class StreamEngine:
                 model, owner.key, model - owner.model_start, hint, d,
                 self._t, end, None))
             self._push(end, "finish", (d, model, ti))
+            if self.timeout_factor is not None:
+                # deadline = k x predicted seconds; pushed after the finish
+                # at the same heap discipline, so an on-time completion's
+                # deadline pops later as a logged no-op
+                self._push(self._t + self.timeout_factor * dur,
+                           "timeout", (d, model, ti))
         if self.metrics is not None:
             self._m_launches.inc()
             self.metrics.counter("engine.launches_by_class",
@@ -509,6 +723,12 @@ class StreamEngine:
             self._push(ev.at, "depart", (ev.tenant_key,))
         elif isinstance(ev, SliceFail):
             self._push(ev.at, "slice_fail", (ev.slice_id, ev.downtime))
+        elif isinstance(ev, TrialHang):
+            self._push(ev.at, "hang", (ev.slice_id,))
+        elif isinstance(ev, TrialPoison):
+            self._push(ev.at, "poison", (ev.slice_id,))
+        elif isinstance(ev, MeshShrink):
+            self._push(ev.at, "mesh_shrink", (ev.num_shards,))
         else:
             raise TypeError(f"unknown trace event {ev!r}")
 
@@ -599,6 +819,16 @@ class StreamEngine:
                     self._handle_slice_fail(*payload)
                 elif kind == "recover":
                     self._handle_recover(*payload)
+                elif kind == "timeout":
+                    self._handle_timeout(*payload)
+                elif kind == "retry":
+                    self._handle_retry(*payload)
+                elif kind == "hang":
+                    self._handle_hang(*payload)
+                elif kind == "poison":
+                    self._handle_poison(*payload)
+                elif kind == "mesh_shrink":
+                    self._handle_mesh_shrink(*payload)
                 else:
                     self._dispatch_extra(kind, payload)
                 self.log.append_processed(self.event_index, t, kind,
@@ -682,7 +912,8 @@ class StreamEngine:
         devplane engine extends this for device lifecycle kinds."""
         if kind == "arrive":
             return [payload[0].key]
-        if kind in ("depart", "finish", "slice_fail", "recover"):
+        if kind in ("depart", "finish", "slice_fail", "recover",
+                    "timeout", "retry", "hang", "poison", "mesh_shrink"):
             return list(payload)
         raise AssertionError(f"unknown event kind {kind!r}")
 
@@ -691,7 +922,8 @@ class StreamEngine:
         rebuilt so arrive entries resolve to the live runtime objects."""
         if kind == "arrive":
             return (self._tenants[data[0]],)
-        if kind in ("depart", "finish", "slice_fail", "recover"):
+        if kind in ("depart", "finish", "slice_fail", "recover",
+                    "timeout", "retry", "hang", "poison", "mesh_shrink"):
             return tuple(data)
         raise AssertionError(f"unknown event kind {kind!r}")
 
@@ -736,6 +968,10 @@ class StreamEngine:
                 "pending": [[k, g] for k, g in self._pending],
                 "admission_queue": [q.key for q in self._admission_queue],
                 "cancelled": sorted(self._cancelled),
+                "hung": sorted(self._hung),
+                "poisoned": sorted(self._poisoned),
+                "retry_attempts": [[k, li, n] for (k, li), n
+                                   in self._retry_attempts.items()],
                 "heap": [[t, seq, kind, self._encode_payload(kind, payload)]
                          for t, seq, kind, payload in self._heap],
             },
@@ -786,6 +1022,11 @@ class StreamEngine:
         self._free = list(me["free"])
         self._pending = [(k, g) for k, g in me["pending"]]
         self._cancelled = set(me["cancelled"])
+        # tolerant restore: pre-supervision snapshots lack these keys
+        self._hung = set(me.get("hung", []))
+        self._poisoned = set(me.get("poisoned", []))
+        self._retry_attempts = {(k, li): n for k, li, n
+                                in me.get("retry_attempts", [])}
 
         self._tenants = {}
         for key_s, (admitted_at, departed, tid, mstart) in \

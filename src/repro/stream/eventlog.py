@@ -60,9 +60,12 @@ from .workload import (
     DeviceLeave,
     DevicePreempt,
     Event,
+    MeshShrink,
     SliceFail,
     TenantArrive,
     TenantDepart,
+    TrialHang,
+    TrialPoison,
 )
 
 LOG_SCHEMA_VERSION = 1
@@ -75,7 +78,8 @@ LOG_SCHEMA_VERSION = 1
 
 def serialize_event(ev: Event) -> dict:
     if not isinstance(ev, (TenantArrive, TenantDepart, SliceFail,
-                           DeviceJoin, DeviceLeave, DevicePreempt)):
+                           DeviceJoin, DeviceLeave, DevicePreempt,
+                           TrialHang, TrialPoison, MeshShrink)):
         raise TypeError(f"unknown event {ev!r}")
     d: dict = {"type": type(ev).__name__, "at": float(ev.at)}
     if isinstance(ev, TenantArrive):
@@ -90,8 +94,10 @@ def serialize_event(ev: Event) -> dict:
         d.update(slice_id=int(ev.slice_id), downtime=float(ev.downtime))
     elif isinstance(ev, DeviceJoin):
         d.update(chips=int(ev.chips), speed=float(ev.speed), cls=ev.cls)
-    elif isinstance(ev, (DeviceLeave, DevicePreempt)):
+    elif isinstance(ev, (DeviceLeave, DevicePreempt, TrialHang, TrialPoison)):
         d.update(slice_id=int(ev.slice_id))
+    elif isinstance(ev, MeshShrink):
+        d.update(num_shards=int(ev.num_shards))
     else:
         raise TypeError(f"unknown event {ev!r}")
     return d
@@ -118,6 +124,12 @@ def deserialize_event(d: dict) -> Event:
         return DeviceLeave(at=d["at"], slice_id=d["slice_id"])
     if t == "DevicePreempt":
         return DevicePreempt(at=d["at"], slice_id=d["slice_id"])
+    if t == "TrialHang":
+        return TrialHang(at=d["at"], slice_id=d["slice_id"])
+    if t == "TrialPoison":
+        return TrialPoison(at=d["at"], slice_id=d["slice_id"])
+    if t == "MeshShrink":
+        return MeshShrink(at=d["at"], num_shards=d["num_shards"])
     raise TypeError(f"unknown event type {t!r}")
 
 

@@ -75,6 +75,12 @@ class TelemetrySink:
         self.num_failed_trials = 0
         self.num_rejected_observations = 0
         self.num_preemptions = 0
+        # failure-domain lifecycle (DESIGN.md §16)
+        self.num_trials_timed_out = 0
+        self.num_trials_retried = 0
+        self.num_trials_abandoned = 0
+        self.num_devices_quarantined = 0
+        self.num_poisoned_observations = 0
         self.end_time = 0.0
         self.num_slices = 0
 
@@ -162,6 +168,37 @@ class TelemetrySink:
         self.num_rejected_observations += 1
         self._add_busy(duration, device)
 
+    # ---- failure-domain lifecycle (DESIGN.md §16) ---------------------------
+
+    def on_trial_timeout(self, t: float, tenant_key: int, model: int,
+                         busy_seconds: float, device: int | None = None,
+                         retrying: bool = False) -> None:
+        """Trial supervision killed a straggler at its deadline.  The device
+        was occupied until the kill; ``retrying=False`` means the model's
+        retry budget is exhausted — it is abandoned (never observed)."""
+        self.num_trials_timed_out += 1
+        if not retrying:
+            self.num_trials_abandoned += 1
+        self._add_busy(busy_seconds, device)
+
+    def on_trial_retry(self, t: float, tenant_key: int, model: int,
+                       attempt: int) -> None:
+        """A timed-out model's backoff expired and it re-entered the launch
+        queue (attempt counts from 1)."""
+        self.num_trials_retried += 1
+
+    def on_quarantine(self, t: float, device: int) -> None:
+        """The device scoreboard quarantined ``device`` (strike threshold)."""
+        self.num_devices_quarantined += 1
+
+    def on_poisoned_observation(self, t: float, tenant_key: int, model: int,
+                                duration: float,
+                                device: int | None = None) -> None:
+        """A trial returned a non-finite loss; the GP-ingest guard rejected
+        it.  The slice was busy for the full duration."""
+        self.num_poisoned_observations += 1
+        self._add_busy(duration, device)
+
     def on_end(self, t: float, num_slices: int) -> None:
         self.end_time = t
         self.num_slices = num_slices
@@ -189,6 +226,11 @@ class TelemetrySink:
             "num_failed_trials": self.num_failed_trials,
             "num_rejected_observations": self.num_rejected_observations,
             "num_preemptions": self.num_preemptions,
+            "num_trials_timed_out": self.num_trials_timed_out,
+            "num_trials_retried": self.num_trials_retried,
+            "num_trials_abandoned": self.num_trials_abandoned,
+            "num_devices_quarantined": self.num_devices_quarantined,
+            "num_poisoned_observations": self.num_poisoned_observations,
             "end_time": self.end_time,
             "num_slices": self.num_slices,
         }
@@ -214,6 +256,12 @@ class TelemetrySink:
         self.num_failed_trials = d["num_failed_trials"]
         self.num_rejected_observations = d["num_rejected_observations"]
         self.num_preemptions = d["num_preemptions"]
+        # tolerant restore: pre-supervision snapshots lack these keys
+        self.num_trials_timed_out = d.get("num_trials_timed_out", 0)
+        self.num_trials_retried = d.get("num_trials_retried", 0)
+        self.num_trials_abandoned = d.get("num_trials_abandoned", 0)
+        self.num_devices_quarantined = d.get("num_devices_quarantined", 0)
+        self.num_poisoned_observations = d.get("num_poisoned_observations", 0)
         self.end_time = d["end_time"]
         self.num_slices = d["num_slices"]
 
@@ -267,6 +315,11 @@ class TelemetrySink:
             "trials": self.num_trials,
             "trials_failed": self.num_failed_trials,
             "trials_preempted": self.num_preemptions,
+            "trials_timed_out": self.num_trials_timed_out,
+            "trials_retried": self.num_trials_retried,
+            "trials_abandoned": self.num_trials_abandoned,
+            "devices_quarantined": self.num_devices_quarantined,
+            "observations_rejected": self.num_poisoned_observations,
             "observations_rejected_after_depart": self.num_rejected_observations,
             "end_time": end_time,
             "device_utilization": utilization,

@@ -85,8 +85,42 @@ class DevicePreempt:
     slice_id: int
 
 
+@dataclass(frozen=True)
+class TrialHang:
+    """The trial currently running on ``slice_id`` hangs: it will never
+    produce its completion.  The device stays busy forever unless trial
+    supervision (``timeout_factor``) rescues it — the failure mode the
+    paper's always-returns assumption excludes."""
+    at: float
+    slice_id: int
+
+
+@dataclass(frozen=True)
+class TrialPoison:
+    """The trial currently running on ``slice_id`` completes on schedule but
+    returns a non-finite loss (NaN) — e.g. a diverged training run.  The
+    engine's GP-ingest guard must reject it instead of corrupting the
+    Cholesky."""
+    at: float
+    slice_id: int
+
+
+@dataclass(frozen=True)
+class MeshShrink:
+    """The scoring mesh loses devices mid-run: re-shard resident posterior
+    slots onto a ``num_shards``-device mesh through the checkpoint path
+    (falling back to fused scoring at ``num_shards == 1``)."""
+    at: float
+    num_shards: int
+
+
 Event = (TenantArrive | TenantDepart | SliceFail
-         | DeviceJoin | DeviceLeave | DevicePreempt)
+         | DeviceJoin | DeviceLeave | DevicePreempt
+         | TrialHang | TrialPoison | MeshShrink)
+
+# event types a ChaosTrace's seeded overlay may inject (the .twin() filter)
+CHAOS_EVENT_TYPES = (SliceFail, DeviceLeave, DevicePreempt,
+                     TrialHang, TrialPoison, MeshShrink)
 
 
 @dataclass(frozen=True)
@@ -273,6 +307,107 @@ def device_churn_trace(
     return ChurnTrace(
         events=tuple(events),
         name=name or f"devchurn-{num_sessions}sessions-s{seed}")
+
+
+@dataclass(frozen=True)
+class ChaosTrace(ChurnTrace):
+    """A churn trace with a seeded chaos overlay (hang / poison / flake /
+    device-loss / mesh-shrink schedules).  ``twin()`` strips every
+    chaos-class event, recovering the failure-free trace the benchmark's
+    bounded-degradation claim is measured against."""
+
+    def twin(self, name: str | None = None) -> ChurnTrace:
+        keep = tuple(e for e in self.events
+                     if not isinstance(e, CHAOS_EVENT_TYPES))
+        return ChurnTrace(events=keep, name=name or f"{self.name}-twin")
+
+
+def chaos_trace(
+    num_sessions: int = 50,
+    arrival_rate: float = 1.0,
+    seed: int = 0,
+    *,
+    initial_slices: int = 4,
+    hang_rate: float = 0.0,
+    poison_rate: float = 0.0,
+    flake_rate: float = 0.0,
+    loss_rate: float = 0.0,
+    flake_downtime: float = 5.0,
+    shrink_at: float | None = None,
+    shrink_shards: int | None = None,
+    chaos_seed: int | None = None,
+    name: str | None = None,
+    **tenant_kw,
+) -> ChaosTrace:
+    """Tenant churn plus a seeded chaos overlay (DESIGN.md §16).
+
+    The tenant side is exactly :func:`poisson_churn_trace` (same seed =>
+    bit-identical tenant events); the chaos side overlays independent
+    Poisson processes across the ARRIVAL window (the ``device_churn_trace``
+    convention):
+
+      * hangs at ``hang_rate``     — ``TrialHang`` on a random alive slice;
+      * poisons at ``poison_rate`` — ``TrialPoison`` on a random alive slice;
+      * flakes at ``flake_rate``   — ``SliceFail`` (self-healing after
+        ``flake_downtime``) on a random alive slice;
+      * losses at ``loss_rate``    — ``DeviceLeave`` (permanent) on a random
+        alive slice, never draining the fleet below one device.
+
+    ``shrink_at``/``shrink_shards`` optionally schedule one deterministic
+    :class:`MeshShrink`.  ``chaos_seed`` defaults to ``seed + 2`` (distinct
+    from ``device_churn_trace``'s ``seed + 1``) so the overlay never
+    perturbs the tenant stream and composes with device churn.
+    """
+    base = poisson_churn_trace(num_sessions, arrival_rate, seed, **tenant_kw)
+    events: list[Event] = list(base.events)
+    horizon = max((e.at for e in events if isinstance(e, TenantArrive)),
+                  default=0.0)
+    rng = np.random.default_rng(seed + 2 if chaos_seed is None else chaos_seed)
+
+    chaos: list[tuple[float, str]] = []
+    for rate, kind in ((hang_rate, "hang"), (poison_rate, "poison"),
+                       (flake_rate, "flake"), (loss_rate, "loss")):
+        if rate <= 0:
+            continue
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= horizon:
+                break
+            chaos.append((t, kind))
+    chaos.sort(key=lambda e: e[0])
+
+    # replay the device population so losses keep targeting slices that
+    # still exist (and hangs/poisons/flakes aim at alive slices too)
+    alive = list(range(initial_slices))
+    out: list[Event] = []
+    for t, kind in chaos:
+        if not alive:
+            break
+        sid = alive[int(rng.integers(len(alive)))]
+        if kind == "hang":
+            out.append(TrialHang(at=t, slice_id=sid))
+        elif kind == "poison":
+            out.append(TrialPoison(at=t, slice_id=sid))
+        elif kind == "flake":
+            out.append(SliceFail(at=t, slice_id=sid,
+                                 downtime=flake_downtime))
+        else:
+            if len(alive) <= 1:
+                continue            # never drain the fleet entirely
+            alive.remove(sid)
+            out.append(DeviceLeave(at=t, slice_id=sid))
+    if shrink_at is not None:
+        if shrink_shards is None or shrink_shards < 1:
+            raise ValueError("shrink_at requires shrink_shards >= 1")
+        out.append(MeshShrink(at=float(shrink_at),
+                              num_shards=int(shrink_shards)))
+
+    events.extend(out)
+    events.sort(key=lambda e: e.at)
+    return ChaosTrace(
+        events=tuple(events),
+        name=name or f"chaos-{num_sessions}sessions-s{seed}")
 
 
 def trace_from_problem(problem: Problem, at: float = 0.0) -> ChurnTrace:

@@ -1,0 +1,538 @@
+"""Failure-domain hardening (DESIGN.md §16): trial supervision, device
+quarantine, live scorer-mesh shrink, and the chaos plane.
+
+The contract under test, layer by layer:
+
+* supervision OFF is byte-identical to the pre-hardening engine (zero new
+  heap events), and supervision ON over a chaos-free trace changes nothing
+  (deadlines always lose the race against real completions);
+* a hung trial strands its device forever without supervision, and is
+  killed at ``timeout_factor x predicted_seconds`` with it — the model
+  re-queues with exponential backoff until the retry budget runs out;
+* a poisoned (non-finite) loss never reaches the GP at any layer: the
+  engine routes it through ``record_failure``, ``record_observation``
+  raises, ``BlockIncrementalGP.observe`` raises;
+* the quarantine scoreboard pulls a striking device from the launchable
+  pool, re-admits it on probation, and re-quarantines on a probation
+  strike (the flap the health plane pages on);
+* a mid-run mesh shrink re-shards every resident posterior slot through
+  the checkpoint path and picks the identical trial sequence to an engine
+  that started on the smaller mesh (and to fused at one shard);
+* every new event kind — timeout, retry, hang, poison, probation,
+  mesh_shrink — replays byte-identically through the crash-anywhere
+  oracle.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from test_eventlog import (
+    assert_replay_matches,
+    crash_and_recover,
+    crash_indices,
+    run_reference,
+)
+
+from repro.core.control_plane import ControlPlane
+from repro.core.fleet import Fleet
+from repro.core.gp import BlockIncrementalGP
+from repro.devplane import DevPlaneEngine, QuarantineBoard, QuarantinePolicy
+from repro.obs.health import HealthMonitor
+from repro.shardgp.layout import BlockPlacement, ShardLayout
+from repro.stream import (
+    ChaosTrace,
+    ChurnTrace,
+    MeshShrink,
+    StreamEngine,
+    TenantArrive,
+    TenantDepart,
+    TrialHang,
+    TrialPoison,
+    chaos_trace,
+    poisson_churn_trace,
+)
+
+
+def fleet_of(n):
+    return Fleet.partition_pod(total_chips=16 * n, num_slices=n)
+
+
+def _tiny_tenant(key, at, m=3, seed=0, cost=10.0):
+    rng = np.random.default_rng(seed)
+    K = 0.04 * np.eye(m) + 0.01
+    return TenantArrive(
+        at=at, tenant_key=key, K_block=K, mu0=np.full(m, 0.5),
+        cost=np.full(m, float(cost)), z_true=rng.uniform(0.2, 0.9, m))
+
+
+def _seq(eng):
+    return [dataclasses.astuple(t) for t in eng._trials]
+
+
+# ---- chaos trace generation --------------------------------------------------
+
+def test_chaos_trace_seeded_and_twin_strips_only_chaos():
+    kw = dict(hang_rate=0.3, poison_rate=0.3, flake_rate=0.15,
+              loss_rate=0.2, shrink_at=10.0, shrink_shards=2)
+    from repro.stream.eventlog import serialize_event as ser
+    a = chaos_trace(25, seed=7, **kw)
+    b = chaos_trace(25, seed=7, **kw)
+    assert isinstance(a, ChaosTrace)
+    assert [ser(e) for e in a] == [ser(e) for e in b]   # seeded determinism
+    kinds = {type(e).__name__ for e in a.events}
+    assert {"TrialHang", "TrialPoison", "SliceFail", "DeviceLeave",
+            "MeshShrink"} <= kinds
+    # the twin is exactly the failure-free tenant stream
+    base = poisson_churn_trace(25, seed=7)
+    assert [ser(e) for e in a.twin()] == [ser(e) for e in base]
+    # the overlay never perturbed the tenant stream
+    tenant_events = [ser(e) for e in a.events
+                     if type(e).__name__.startswith("Tenant")]
+    assert tenant_events == [ser(e) for e in base]
+
+
+def test_chaos_trace_loss_never_drains_fleet():
+    tr = chaos_trace(40, seed=1, loss_rate=5.0, initial_slices=3)
+    losses = [e for e in tr.events if type(e).__name__ == "DeviceLeave"]
+    assert len(losses) == 2                      # 3 slices -> at most 2 losses
+    assert len({e.slice_id for e in losses}) == 2
+
+
+def test_chaos_trace_validation():
+    with pytest.raises(ValueError, match="shrink_shards"):
+        chaos_trace(5, seed=0, shrink_at=3.0)
+
+
+def test_supervision_knob_validation():
+    with pytest.raises(ValueError, match="timeout_factor"):
+        StreamEngine(fleet_of(1), "mdmt", timeout_factor=1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        StreamEngine(fleet_of(1), "mdmt", timeout_factor=2.0, max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        StreamEngine(fleet_of(1), "mdmt", timeout_factor=2.0,
+                     retry_backoff=0.0)
+
+
+# ---- supervision: byte-identity when it has nothing to do --------------------
+
+def test_supervision_on_chaos_free_trace_is_byte_identical():
+    """Deadlines are pushed strictly after completions (timeout_factor >
+    1), so over a chaos-free trace every deadline finds its trial done and
+    the trial sequence is untouched."""
+    trace = poisson_churn_trace(num_sessions=15, seed=1)
+    bare = StreamEngine(fleet_of(4), "mdmt", seed=0, max_live_models=24)
+    sup = StreamEngine(fleet_of(4), "mdmt", seed=0, max_live_models=24,
+                       timeout_factor=2.0, max_retries=3)
+    bare.run(trace)
+    sup.run(trace)
+    assert _seq(bare) == _seq(sup)
+    s = sup.telemetry.summary(now=sup._t)
+    assert s["trials_timed_out"] == 0 and s["trials_retried"] == 0
+
+
+# ---- supervision: hang, timeout, retry, abandonment --------------------------
+
+def _hang_trace(hang_ats, depart_at=200.0, m=3):
+    events = [_tiny_tenant(0, at=0.0, m=m)]
+    events += [TrialHang(at=t, slice_id=0) for t in hang_ats]
+    events.append(TenantDepart(at=depart_at, tenant_key=0))
+    return ChurnTrace(events=tuple(events), name="hang")
+
+
+def test_hang_without_supervision_strands_device():
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0)
+    eng.run(_hang_trace([1.0]))
+    # one launch, zero observations, device busy forever
+    assert len(eng._trials) == 1
+    assert all(t.z is None for t in eng._trials)
+    assert eng.fleet.slices[0].current_trial is not None
+
+
+def test_timeout_rescues_device_and_retry_completes():
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0,
+                       timeout_factor=1.5, max_retries=2, retry_backoff=1.0)
+    eng.run(_hang_trace([1.0]))
+    s = eng.telemetry.summary(now=eng._t)
+    assert s["trials_timed_out"] == 1
+    assert s["trials_retried"] == 1
+    assert s["trials_abandoned"] == 0
+    # the hung model was retried and observed; every model got its z
+    observed = {t.local_model for t in eng._trials if t.z is not None}
+    assert observed == {0, 1, 2}
+    # the killed trial record is rewritten to its kill time (cost 10,
+    # factor 1.5 -> deadline at t=15), not its predicted end
+    killed = [t for t in eng._trials if t.z is None]
+    assert len(killed) == 1 and killed[0].end == pytest.approx(15.0)
+
+
+def test_retry_budget_exhaustion_abandons_model():
+    """Every relaunch of the (single) cursed model hangs.  With
+    max_retries=1 the second timeout abandons it: the model stays selected
+    (never re-picked, never re-timed-out) and the engine still
+    terminates."""
+    # launch at 0 (dur 10, deadline 15); retry lands at 16, relaunch at 16
+    # (deadline 31).  Hang both instances.
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0,
+                       timeout_factor=1.5, max_retries=1, retry_backoff=1.0)
+    eng.run(_hang_trace([1.0, 17.0], m=1))
+    s = eng.telemetry.summary(now=eng._t)
+    assert s["trials_timed_out"] == 2
+    assert s["trials_retried"] == 1
+    assert s["trials_abandoned"] == 1
+    # exactly two launch attempts, neither observed, no third relaunch
+    assert len(eng._trials) == 2
+    assert all(t.z is None for t in eng._trials)
+    assert [t.start for t in eng._trials] == pytest.approx([0.0, 16.0])
+
+
+def test_timeout_deadline_scales_with_predicted_duration():
+    """k x predicted_seconds, not a global constant: a slow model's
+    deadline lands proportionally later."""
+    events = (_tiny_tenant(0, at=0.0, m=1, cost=40.0),
+              TrialHang(at=1.0, slice_id=0),
+              TenantDepart(at=500.0, tenant_key=0))
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0,
+                       timeout_factor=2.0, max_retries=0)
+    eng.run(ChurnTrace(events=events, name="slow-hang"))
+    killed = [t for t in eng._trials if t.z is None]
+    assert killed and killed[0].end == pytest.approx(80.0)   # 2.0 x 40
+
+
+# ---- poisoned observations ---------------------------------------------------
+
+def test_poison_rejected_and_model_returns_to_pool():
+    events = (_tiny_tenant(0, at=0.0, m=3),
+              TrialPoison(at=1.0, slice_id=0),
+              TenantDepart(at=200.0, tenant_key=0))
+    eng = StreamEngine(fleet_of(1), "mdmt", seed=0)
+    eng.run(ChurnTrace(events=events, name="poison"))
+    s = eng.telemetry.summary(now=eng._t)
+    assert s["observations_rejected"] == 1
+    # the poisoned model went back to the pool and was re-run clean
+    observed = {t.local_model for t in eng._trials if t.z is not None}
+    assert observed == {0, 1, 2}
+    assert len(eng._trials) == 4                 # 3 models + 1 poisoned rerun
+
+
+def test_control_plane_rejects_non_finite_observation(rng):
+    from conftest import random_psd
+    cp = ControlPlane(np.random.default_rng(0), num_shards=1)
+    h = cp.add_tenant(random_psd(rng, 3, 0.04), np.zeros(3), np.ones(3))
+    gid = int(h.models[0])
+    cp.record_start(gid)
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        with pytest.raises(ValueError, match="non-finite"):
+            cp.record_observation(gid, bad)
+    cp.record_observation(gid, 0.5)              # finite still folds
+
+
+def test_block_gp_rejects_non_finite(rng):
+    from conftest import random_psd
+    gp = BlockIncrementalGP()
+    gp.add_block(np.arange(3), random_psd(rng, 3, 0.04), np.zeros(3))
+    with pytest.raises(ValueError, match="non-finite"):
+        gp.observe(0, float("nan"))
+    gp.observe(0, 0.3)
+
+
+# ---- quarantine board (unit) -------------------------------------------------
+
+def test_quarantine_policy_validation():
+    for bad in (dict(threshold=0), dict(window=0.0), dict(duration=-1.0),
+                dict(probation_trials=0)):
+        with pytest.raises(ValueError):
+            QuarantinePolicy(**bad)
+
+
+def test_quarantine_board_lifecycle():
+    b = QuarantineBoard(QuarantinePolicy(threshold=3, window=10.0,
+                                         duration=5.0, probation_trials=2))
+    assert b.strike(0, 1.0) is False
+    assert b.strike(0, 2.0) is False
+    assert b.strike(0, 3.0) is True              # third strike in window
+    assert b.state(0) == "quarantined" and b.quarantined_now() == 1
+    assert b.strike(0, 3.5) is False             # ignored while quarantined
+    b.begin_probation(0)
+    assert b.state(0) == "probation"
+    assert not b.is_quarantined(0)               # launchable again
+    b.on_success(0)
+    assert b.state(0) == "probation"             # needs 2 clean trials
+    b.on_success(0)
+    assert b.state(0) == "healthy"
+    assert b.quarantine_count(0) == 1
+
+
+def test_quarantine_board_window_expiry_and_flap():
+    b = QuarantineBoard(QuarantinePolicy(threshold=2, window=5.0,
+                                         duration=5.0))
+    assert b.strike(1, 0.0) is False
+    assert b.strike(1, 10.0) is False            # first strike aged out
+    assert b.strike(1, 11.0) is True
+    b.begin_probation(1)
+    assert b.strike(1, 20.0) is True             # probation strike = flap
+    assert b.quarantine_count(1) == 2
+    b.retire(1)
+    assert b.quarantined_now() == 0
+    assert b.state(1) == "healthy"
+
+
+def test_quarantine_board_state_round_trip():
+    b = QuarantineBoard(QuarantinePolicy(threshold=2, window=10.0,
+                                         duration=5.0))
+    b.strike(0, 1.0)
+    b.strike(1, 1.0); b.strike(1, 2.0)
+    b.begin_probation(1); b.on_success(1)
+    c = QuarantineBoard(b.policy)
+    c.load_state(b.state_dict())
+    assert c.state_dict() == b.state_dict()
+    assert c.state(1) == "probation"
+
+
+# ---- quarantine in the engine ------------------------------------------------
+
+def test_engine_quarantines_striking_device_and_readmits():
+    """One device, repeated hangs: 2 strikes quarantine it, the retry has
+    to wait out the quarantine, probation re-admits, everything finishes."""
+    # trial A launches at 0 (deadline 15); the device then launches B at 15
+    # (deadline 30).  Hangs at 1 and 17 kill both: strike 2 at t=30
+    # quarantines until t=50; probation re-admits and everything retries.
+    trace = ChurnTrace(events=(
+        _tiny_tenant(0, at=0.0, m=3),
+        TrialHang(at=1.0, slice_id=0),           # strike 1 at t=15
+        TrialHang(at=17.0, slice_id=0),          # strike 2 at t=30
+        TenantDepart(at=400.0, tenant_key=0),
+    ), name="strikes")
+    eng = DevPlaneEngine(fleet_of(1), "mdmt", seed=0,
+                         timeout_factor=1.5, max_retries=3,
+                         retry_backoff=1.0,
+                         quarantine=QuarantinePolicy(
+                             threshold=2, window=100.0, duration=20.0))
+    eng.run(trace)
+    s = eng.telemetry.summary(now=eng._t)
+    assert s["devices_quarantined"] == 1
+    assert s["trials_timed_out"] == 2
+    assert eng.quarantine.quarantine_count(0) == 1
+    assert eng.quarantine.state(0) == "healthy"  # probation served clean
+    # no launch happened inside the quarantine window [30, 50)
+    assert all(not (30.0 < t.start < 50.0) for t in eng._trials)
+    assert any(t.start >= 50.0 for t in eng._trials)
+    observed = {t.local_model for t in eng._trials if t.z is not None}
+    assert observed == {0, 1, 2}
+
+
+def test_quarantined_capacity_shrinks_autoscale_denominator():
+    """Quarantined devices drop out of the autoscale denominator: the same
+    workload that never crosses the join threshold on 3 healthy devices
+    does cross it when one device is quarantined — sick capacity triggers
+    a scale-up."""
+    from repro.devplane import AutoscalePolicy
+    from repro.stream import SliceFail
+
+    # 12 models, 3 launched at t=0 -> backlog 9 (9/3 = 3 < high 4.0).
+    # The flake at t=1 kills a trial (backlog 10) AND, with threshold=1,
+    # quarantines the device: 10/2 = 5 > 4 -> join.
+    trace = ChurnTrace(events=(
+        _tiny_tenant(0, at=0.0, m=12),
+        SliceFail(at=1.0, slice_id=0, downtime=5.0),
+        TenantDepart(at=600.0, tenant_key=0),
+    ), name="sick-fleet")
+
+    def run(quarantine):
+        eng = DevPlaneEngine(
+            fleet_of(3), "mdmt", seed=0,
+            autoscale=AutoscalePolicy(high_backlog=4.0, low_backlog=0.1,
+                                      cooldown=0.0, max_devices=8),
+            quarantine=quarantine)
+        eng.run(trace)
+        return eng
+
+    sick = run(QuarantinePolicy(threshold=1, window=10.0, duration=100.0))
+    assert sick.telemetry.summary(now=sick._t)["devices_quarantined"] == 1
+    assert sick._autoscale_joins > 0
+    healthy = run(None)                          # same trace, no scoreboard
+    assert healthy._autoscale_joins == 0
+
+
+# ---- mesh shrink -------------------------------------------------------------
+
+def test_repartition_matches_fresh_placement_order(rng):
+    lay = ShardLayout(num_shards=4, shard_capacity=8)
+    sizes = [3, 5, 2, 4, 1]
+    for k, m in enumerate(sizes):
+        lay.place(k, m)
+    lay.release(2)
+    new_lay, remap = ShardLayout.repartition(lay.blocks, 2)
+    assert new_lay.num_shards == 2
+    assert set(new_lay.blocks) == set(lay.blocks)
+    # a restart that admits the same blocks in the same order agrees
+    fresh = ShardLayout(num_shards=2, shard_capacity=1)
+    for k, pl in lay.blocks.items():
+        fresh.place(k, pl.length)
+    assert fresh.blocks == new_lay.blocks
+    # the remap covers every live slot bijectively
+    assert len(remap) == sum(pl.length for pl in lay.blocks.values())
+    assert len(set(remap.values())) == len(remap)
+    with pytest.raises(ValueError):
+        ShardLayout.repartition({0: BlockPlacement(0, 2)}, 0)
+
+
+def test_control_plane_reshard_preserves_decisions(rng):
+    """Shrink the layout mid-stream: the posterior, incumbents, and the
+    next decisions are unchanged up to the slot remap."""
+    from conftest import random_psd
+    cp = ControlPlane(np.random.default_rng(0), num_shards=4)
+    hs = [cp.add_tenant(random_psd(rng, 3, 0.04), np.zeros(3), np.ones(3))
+          for _ in range(3)]
+    for h in hs:
+        g = int(h.models[0])
+        cp.record_start(g)
+        cp.record_observation(g, float(rng.uniform(0.2, 0.8)))
+    pick_before, _ = cp.choose_mdmt()
+    mu_before = {(h.tenant_id, j): float(cp.gp.posterior()[0][h.models[j]])
+                 for h in hs for j in range(3)}
+
+    remap = cp.reshard(2)
+    assert remap and cp._layout.num_shards == 2
+    assert cp.reshard(2) == {}                   # no-op at the same size
+    pick_after, _ = cp.choose_mdmt()
+    assert remap[pick_before] == pick_after
+    # the posterior followed every slot through the remap
+    mu, _ = cp.gp.posterior()
+    for h in hs:
+        for j in range(3):
+            assert float(mu[remap[int(h.models[j])]]) == \
+                pytest.approx(mu_before[(h.tenant_id, j)], abs=1e-6)
+
+
+def test_control_plane_reshard_guards():
+    cp = ControlPlane(np.random.default_rng(0), num_shards=2)
+    with pytest.raises(ValueError, match="num_shards"):
+        cp.reshard(0)
+    from repro.core import synthetic_matern_problem
+    frozen = ControlPlane.from_problem(
+        synthetic_matern_problem(num_users=2, num_models_per_user=3, seed=0))
+    with pytest.raises(RuntimeError, match="dynamic"):
+        frozen.reshard(1)
+
+
+def test_mesh_shrink_equals_engine_started_on_smaller_mesh():
+    """The acceptance bar: a mid-run MeshShrink(2) on a 4-shard engine
+    produces the identical trial sequence to a 2-shard engine running the
+    same trace (for which the shrink is a no-op) — no decision dropped or
+    changed across the re-shard.  Global slot ids are layout-dependent, so
+    the comparison projects to (tenant, local model, device, times, z)."""
+    trace = chaos_trace(20, seed=11, shrink_at=8.0, shrink_shards=2)
+    runs = {}
+    for shards in (4, 2):
+        eng = StreamEngine(fleet_of(4), "mdmt", seed=0, num_shards=shards,
+                           max_live_models=24)
+        eng.run(trace)
+        runs[shards] = [(t.tenant_key, t.local_model, t.device,
+                         t.start, t.end, t.z) for t in eng._trials]
+    assert runs[4] == runs[2]
+
+
+def test_mesh_shrink_to_one_falls_back_to_fused():
+    """On a real forced 4-device mesh: a sharded engine shrunk 4 -> 1
+    mid-run swaps to the fused scorer and still matches the all-fused
+    twin's trial sequence exactly."""
+    from conftest import run_forced_devices_subprocess
+    res = run_forced_devices_subprocess("""
+        import json
+        from repro.core.fleet import Fleet
+        from repro.stream import StreamEngine, chaos_trace
+
+        trace = chaos_trace(16, seed=13, shrink_at=6.0, shrink_shards=1)
+        seqs, scorers = {}, {}
+        for scorer, shards in (("sharded", 4), ("fused", 1)):
+            eng = StreamEngine(Fleet.partition_pod(16 * 4, 4), "mdmt",
+                               seed=0, scorer=scorer, num_shards=shards,
+                               max_live_models=24)
+            eng.run(trace)
+            seqs[scorer] = [(t.tenant_key, t.local_model, t.device,
+                             t.start, t.end, t.z) for t in eng._trials]
+            scorers[scorer] = eng.cp.scorer
+        print(json.dumps({
+            "equal": seqs["sharded"] == seqs["fused"],
+            "num_trials": len(seqs["fused"]),
+            "final_scorer": scorers["sharded"],
+        }))
+    """, devices=4)
+    assert res["num_trials"] > 16
+    assert res["final_scorer"] == "fused"        # the fallback actually fired
+    assert res["equal"], "shrink-to-1 diverged from the fused twin"
+
+
+# ---- health detectors (unit feeds) -------------------------------------------
+
+def test_health_straggler_and_retry_storm_detectors():
+    h = HealthMonitor(window=10.0, retry_storm_k=2)
+    h.on_timeout(1.0, 3, device=0, tenant=7, overrun=15.0)
+    h.on_timeout(2.0, 4, device=0, tenant=7, overrun=15.0)   # deduped
+    h.on_timeout(3.0, 5, device=1, tenant=8, overrun=9.0)
+    kinds = [a.kind for a in h.alerts]
+    assert kinds.count("straggler") == 2
+    h.on_retry(4.0, 6, tenant=7, model=3, attempt=1)
+    assert "retry_storm" not in [a.kind for a in h.alerts]
+    h.on_retry(4.5, 7, tenant=8, model=9, attempt=1)
+    storms = [a for a in h.alerts if a.kind == "retry_storm"]
+    assert len(storms) == 1 and storms[0].severity == "page"
+    # disarmed until the rate halves; re-arms after the window drains
+    h.on_retry(5.0, 8, tenant=9, model=2, attempt=2)
+    assert len([a for a in h.alerts if a.kind == "retry_storm"]) == 1
+    h.on_retry(30.0, 9, tenant=9, model=2, attempt=3)        # window empty
+    h.on_retry(30.5, 10, tenant=7, model=3, attempt=2)
+    assert len([a for a in h.alerts if a.kind == "retry_storm"]) == 2
+
+
+def test_health_quarantine_flap_and_poisoned_detectors():
+    h = HealthMonitor(window=10.0, flap_window=50.0)
+    h.on_quarantine(1.0, 2, device=3, count=1)
+    assert "quarantine_flap" not in [a.kind for a in h.alerts]
+    h.on_quarantine(20.0, 8, device=3, count=2)              # 2 in 50s: flap
+    flaps = [a for a in h.alerts if a.kind == "quarantine_flap"]
+    assert len(flaps) == 1 and flaps[0].severity == "page"
+    h.on_poisoned(21.0, 9, tenant=4, model=17)
+    poisons = [a for a in h.alerts if a.kind == "poisoned_observation"]
+    assert len(poisons) == 1 and poisons[0].severity == "warn"
+    # round-trip the new detector state
+    h2 = HealthMonitor(window=10.0, flap_window=50.0)
+    h2.load_state(h.state_dict())
+    assert h2.state_dict() == h.state_dict()
+
+
+# ---- crash-anywhere with the full chaos plane --------------------------------
+
+def test_crash_anywhere_under_chaos(tmp_path):
+    """The replay oracle over every new event kind at once: supervision +
+    quarantine + chaos trace (hangs, poisons, flakes, losses, a mesh
+    shrink), killed and restored at stride-sampled (all, under
+    FAULT_EVENTS=all) processed-event indices."""
+    trace = chaos_trace(num_sessions=30, arrival_rate=1.2, seed=9,
+                        initial_slices=4, hang_rate=0.30, poison_rate=0.20,
+                        flake_rate=0.10, loss_rate=0.04,
+                        shrink_at=10.0, shrink_shards=1,
+                        m_min=2, m_max=8, session_scale=10.0)
+
+    def make(**kw):
+        return DevPlaneEngine(
+            fleet_of(4), "mdmt", seed=0, max_live_models=40, num_shards=2,
+            timeout_factor=2.5, max_retries=2, retry_backoff=1.0,
+            quarantine=QuarantinePolicy(threshold=2, window=40.0,
+                                        duration=15.0),
+            compact_every=3, **kw)
+
+    ref_eng, ref_res = run_reference(make, trace)
+    s = ref_res.telemetry.summary()
+    # the trace must actually exercise the hardening paths
+    assert s["trials_timed_out"] > 0
+    assert s["trials_retried"] > 0
+    assert s["observations_rejected"] > 0
+    n = ref_eng.event_index
+    for idx in crash_indices(n):
+        out = crash_and_recover(make, trace, idx, "before", tmp_path,
+                                snapshot_every=8)
+        assert_replay_matches(ref_eng, ref_res, *out[:3],
+                              context=f"chaos_before_{idx}")

@@ -270,6 +270,35 @@ def test_preempt_requeues_like_slice_failure_but_no_downtime():
     assert obs == set(range(3))
 
 
+def test_slice_fail_mid_batched_wave_keeps_batched_equal_sequential():
+    """Regression (DESIGN.md §16): a SliceFail landing exactly at a wave
+    boundary — several devices freed at the same instant, one of them
+    failing before the launch pass drains — must not desynchronize the
+    batched and sequential assignment paths.  Uniform costs force
+    synchronized completion waves; the failures hit at those wave times."""
+    ta = _tiny_tenant(0, at=0.0, m=16, cost=np.full(16, 4.0))
+    events = [ta]
+    from repro.stream import SliceFail
+    # waves complete at t=4, 8, 12, ...: fail a mid-wave slice at each of
+    # the first two boundaries (downtime spans one wave), and once mid-wave
+    for at, sid in ((4.0, 1), (8.0, 2), (10.0, 0)):
+        events.append(SliceFail(at=at, slice_id=sid, downtime=4.0))
+    trace = ChurnTrace(events=tuple(sorted(events, key=lambda e: e.at)),
+                       name="fail-mid-wave")
+    runs = {}
+    for assign in ("batched", "sequential"):
+        eng = DevPlaneEngine(fleet_of(4), "mdmt", seed=0, assign=assign)
+        res = eng.run(trace)
+        runs[assign] = [(t.model, t.device, t.start, t.end, t.z)
+                        for t in res.trials]
+    assert runs["batched"] == runs["sequential"]
+    # the failures actually killed in-flight work and it was re-queued
+    killed = [t for t in runs["batched"] if t[4] is None]
+    assert killed
+    obs = {t[0] for t in runs["batched"] if t[4] is not None}
+    assert len(obs) == 16                       # every model still observed
+
+
 def test_leave_then_recover_race_stays_retired():
     """A slice that fails, then leaves while down, must not rejoin when the
     pending repair fires."""

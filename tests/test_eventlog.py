@@ -43,11 +43,14 @@ from repro.stream import (
     DevicePreempt,
     EventLog,
     FaultInjector,
+    MeshShrink,
     SimulatedCrash,
     SliceFail,
     StreamEngine,
     TenantArrive,
     TenantDepart,
+    TrialHang,
+    TrialPoison,
     device_churn_trace,
     first_divergence,
     poisson_churn_trace,
@@ -174,6 +177,9 @@ def test_event_serialization_round_trip(rng):
         DeviceJoin(at=3.0, chips=8, speed=1.75, cls="fast"),
         DeviceLeave(at=4.0, slice_id=1),
         DevicePreempt(at=5.0, slice_id=2),
+        TrialHang(at=6.0, slice_id=0),
+        TrialPoison(at=7.0, slice_id=3),
+        MeshShrink(at=8.0, num_shards=2),
     ]
     for ev in events:
         # through an actual JSON round trip: repr-based floats must be exact
